@@ -1,0 +1,29 @@
+"""Paper Fig. 5-6 analogue: embedded-function-mode — in-path transforms in
+the collective. Needs >1 device; run via subprocess with forced devices."""
+import os
+import subprocess
+import sys
+
+
+SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from repro.core import inpath
+for r in inpath.measure(size=1 << 18, iters=10):
+    print(f"ROW,{r.method},{r.wall_s_per_call*1e6:.1f},{r.wire_bytes_per_device},{r.max_error:.5f}")
+"""
+
+
+def run(duration: float = 0.0):
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    rows = []
+    for ln in out.stdout.splitlines():
+        if ln.startswith("ROW,"):
+            _, method, us, wire, err = ln.split(",")
+            rows.append(("fig5_inpath", f"{method}_us_per_call", float(us)))
+            rows.append(("fig5_inpath", f"{method}_wire_bytes", int(wire)))
+    if not rows:
+        rows.append(("fig5_inpath", "error", out.stderr[-200:]))
+    return rows

@@ -1,0 +1,19 @@
+"""Roofline table from the dry-run artifacts (section Roofline/Dry-run)."""
+import glob
+import json
+import os
+
+
+def run(duration: float = 0.0, dryrun_dir: str = "experiments/dryrun"):
+    rows = []
+    files = sorted(glob.glob(os.path.join(dryrun_dir, "*.json")))
+    if not files:
+        return [("roofline", "missing",
+                 "run: python -m repro.launch.dryrun --all --mesh both")]
+    for f in files:
+        d = json.load(open(f))
+        tag = f"{d['arch']}.{d['shape']}.{d['mesh']}"
+        rows.append(("roofline", tag + ".bottleneck", d["bottleneck"]))
+        rows.append(("roofline", tag + ".fraction",
+                     round(d["roofline_fraction"], 4)))
+    return rows

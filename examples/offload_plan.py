@@ -1,0 +1,53 @@
+"""The paper's workflow end-to-end: characterize (stressors + roofline) ->
+decide (planner) -> configure the training step.
+
+  PYTHONPATH=src python examples/offload_plan.py [dryrun_json]
+"""
+import json
+import sys
+
+from repro.core.headroom import RooflineTerms, derived_headroom
+from repro.core.planner import make_plan
+from repro.core.stressors import run_suite
+from repro.core.classes import aggregate, ranking
+
+
+def main():
+    path = (sys.argv[1] if len(sys.argv) > 1 else
+            "experiments/dryrun/jamba-1.5-large-398b__train_4k__multipod.json")
+    try:
+        d = json.load(open(path))
+        terms = RooflineTerms(d["compute_s"], d["memory_s"], d["collective_s"])
+        print(f"cell: {d['arch']} x {d['shape']} on {d['mesh']} "
+              f"({d['n_chips']} chips)")
+    except FileNotFoundError:
+        print(f"no dry-run artifact at {path}; using canned terms")
+        terms = RooflineTerms(0.9, 0.4, 2.2)
+
+    hr = derived_headroom(terms)
+    print(f"bottleneck: {hr['bottleneck']}  headroom: "
+          f"{hr['headroom_fraction']:.1%} "
+          f"({hr['free_offload_gflops']:.0f} GFLOP free per step)")
+    print("advice:", hr["advice"])
+
+    print("\nrunning stressor suite (paper sec. III) ...")
+    res = run_suite(duration=0.15)
+    print("top profitable operations (Table III analogue):")
+    for r in ranking(res)[:6]:
+        print(f"  {r.name:22s} {r.relative:6.2f}x reference")
+    sig = [s for s in aggregate(res) if s.significant]
+    print(f"classes with mean > std: {len(sig)} "
+          "(paper: class aggregates are rarely actionable)")
+
+    plan = make_plan(terms, res)
+    print("\nOffloadPlan:")
+    print(f"  dp_method       = {plan.dp_method}")
+    print(f"  use_quant_kernel= {plan.use_quant_kernel}")
+    print(f"  remat           = {plan.remat}")
+    print(f"  microbatches    = {plan.microbatches}")
+    for n in plan.notes:
+        print("  -", n)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: train a tiny LM for 30 steps on CPU, checkpoint, generate.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import all_archs, smoke
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import DataConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models import registry
+from repro.serve.engine import Engine, Request
+from repro.train import loop as tloop, step as tstep
+from repro.train.optimizer import OptConfig
+
+
+def main():
+    cfg = smoke(all_archs()["olmo-1b"])
+    mesh = make_host_mesh(1, 1)
+    shape = ShapeConfig("quick", "train", 64, 4)
+    opts = tstep.TrainOptions(remat=False, opt=OptConfig(
+        lr=1e-3, warmup_steps=5, decay_steps=30))
+
+    state = tstep.make_train_state(cfg, opts, jax.random.key(0))
+    stepf, _ = tstep.make_train_step(cfg, shape, mesh, opts)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=4)
+    mgr = CheckpointManager(tempfile.mkdtemp(), keep=1)
+    state, hist = tloop.train_loop(
+        jax.jit(stepf), state, dcfg, None, mgr,
+        tloop.LoopConfig(total_steps=30, checkpoint_every=10, log_every=10))
+    print(f"loss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+    eng = Engine(cfg, mesh, batch_size=2, cache_len=96,
+                 params=state["params"])
+    reqs = [Request(prompt=np.arange(8, dtype=np.int32),
+                    max_new_tokens=8) for _ in range(2)]
+    out = eng.generate(reqs)
+    print("generated:", out[0].generated)
+
+
+if __name__ == "__main__":
+    main()

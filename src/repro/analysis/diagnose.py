@@ -1,0 +1,43 @@
+"""Per-cell collective breakdown (perf-iteration profiling aid).
+
+  PYTHONPATH=src python -m repro.analysis.diagnose <arch> <shape> [pod|multipod] [--sp]
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           "--xla_disable_hlo_passes=all-reduce-promotion")
+import collections
+import sys
+
+from repro.analysis import hlocost
+from repro.configs import all_archs
+from repro.configs.base import SHAPES
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    mesh_name = sys.argv[3] if len(sys.argv) > 3 else "pod"
+    sp = "--sp" in sys.argv
+    dp = "stock"
+    for a in sys.argv:
+        if a.startswith("--dp="):
+            dp = a.split("=")[1]
+    cfg = all_archs()[arch]
+    mesh = make_production_mesh(multi_pod=mesh_name == "multipod")
+    compiled = lower_cell(cfg, SHAPES[shape], mesh, sp=sp, dp=dp)[0].compile()
+    costs = hlocost.analyze_text(compiled.as_text())
+    agg = collections.Counter()
+    for c in costs.collectives:
+        key = (c.kind, f"{c.operand_bytes/1e6:.0f}MB", c.is_dcn)
+        agg[key] += c.wire_bytes_tpu * c.count
+    summ = costs.summary()
+    print(f"total wire (tpu-dtype): {summ.total_wire_bytes/1e9:.1f} GB/device "
+          f"(raw {summ.raw_wire_bytes/1e9:.1f}) "
+          f"ici={summ.ici_wire_bytes/1e9:.1f} dcn={summ.dcn_wire_bytes/1e9:.1f}")
+    for (kind, sz, dcn), wb in agg.most_common(14):
+        print(f"  {wb/1e9:8.1f}GB  {kind:20s} op={sz:>8s} {'DCN' if dcn else 'ICI'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,288 @@
+"""Trip-count-aware HLO cost model (FLOPs + HBM traffic + collectives).
+
+XLA's ``compiled.cost_analysis()`` counts each while body ONCE, so any
+scan-over-layers model is undercounted by ~num_layers.  This module parses
+the compiled HLO text, builds the call graph (while bodies with
+known_trip_count, fusions, calls, conditionals), and accumulates:
+
+  * flops        — 2*M*N*K per dot (resolving operand shapes from def sites),
+                   multiplied through enclosing trip counts;
+  * hbm_bytes    — boundary traffic: result + operand bytes per surface
+                   instruction (fusion internals excluded; bookkeeping ops
+                   excluded), multiplied by trip counts.  An *unfused upper
+                   bound* relative to a real TPU build; used uniformly
+                   across cells so comparisons stay valid.
+  * collectives  — wire bytes per op kind (see analysis/hlo.py model).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from repro.analysis.hlo import (_parse_groups, shape_bytes, CollectiveOp,
+                                CollectiveSummary, summarize, _COLLECTIVES)
+
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->\s*(.+?)\s*\{\s*$")
+def _balanced(s: str, start: int) -> int:
+    """Index one past the ')' matching the '(' at ``start``."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+def _parse_instr(line: str):
+    """'%name = TYPE opcode(operands), attrs' -> dict or None.
+
+    Handles tuple result types and nested parens via a balanced scan."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    iname = s[1:eq]
+    rest = s[eq + 3:]
+    if rest.startswith("("):  # tuple type
+        end = _balanced(rest, 0)
+        rtype = rest[:end]
+        rest = rest[end:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        rtype = rest[:sp]
+        rest = rest[sp + 1:].lstrip()
+    par = rest.find("(")
+    if par < 0:
+        return None
+    opcode = rest[:par].strip()
+    end = _balanced(rest, par)
+    operands = rest[par + 1:end - 1]
+    attrs = rest[end:]
+    return {"name": iname, "type": rtype, "op": opcode,
+            "operands": operands, "rest": attrs}
+
+_BOOKKEEPING = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "iota", "partition-id",
+    "replica-id", "rng-get-and-update-state", "opt-barrier",
+}
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: list = field(default_factory=list)
+
+    def summary(self) -> CollectiveSummary:
+        return summarize(self.collectives)
+
+
+def _prod(dims):
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _parse_dims(shape_str):
+    m = re.search(r"\w+\[([\d,]*)\]", shape_str)
+    if not m:
+        return []
+    return [int(x) for x in m.group(1).split(",") if x]
+
+
+class _Module:
+    def __init__(self, hlo_text: str, pod_size: int):
+        self.pod_size = pod_size
+        self.comps: dict[str, list[dict]] = {}
+        self.shapes: dict[str, dict[str, str]] = {}
+        self.entry = None
+        name = None
+        header: list[str] = []
+        for line in hlo_text.splitlines():
+            if not line:
+                continue
+            # computation headers start at column 0 (may span lines,
+            # nested parens in the arg list) and end at '{'
+            if header or (line[0] not in " \t}" and "(" in line
+                          and not line.lstrip().startswith("HloModule")):
+                header.append(line)
+                if "{" not in line:
+                    continue
+                hdr = " ".join(header)
+                header = []
+                m = re.search(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(", hdr)
+                if m:
+                    name = m.group(2)
+                    self.comps[name] = []
+                    self.shapes[name] = {}
+                    if m.group(1):
+                        self.entry = name
+                continue
+            if name is not None and line.strip().startswith(("%", "ROOT")):
+                ins = _parse_instr(line)
+                if ins is None:
+                    continue
+                self.shapes[name][ins["name"]] = ins["type"]
+                self.comps[name].append(ins)
+        if self.entry is None and self.comps:
+            self.entry = next(iter(self.comps))
+
+    @staticmethod
+    def _operand_names(s: str):
+        return re.findall(r"%([\w\.\-]+)", s)
+
+    def _root_op(self, cname: str):
+        instrs = self.comps.get(cname, [])
+        return instrs[-1]["op"] if instrs else ""
+
+    def _dus_update_bytes(self, cname: str) -> int:
+        """Update-operand bytes of the dynamic-update-slice inside a fused
+        computation (those fusions alias in place on TPU: the full-buffer
+        result is NOT traffic, only the updated slice is)."""
+        shp = self.shapes.get(cname, {})
+        for ins in self.comps.get(cname, []):
+            if ins["op"] == "dynamic-update-slice":
+                ops = self._operand_names(ins["operands"])
+                if len(ops) >= 2:
+                    return shape_bytes(shp.get(ops[1], ""))
+        return 0
+
+    def _fusion_read_bytes(self, cname: str, operand_shapes: list[str]) -> float:
+        """Bytes actually read from each fusion operand: parameters consumed
+        only through (dynamic-)slice count as the slice, not the buffer."""
+        instrs = self.comps.get(cname, [])
+        shp = self.shapes.get(cname, {})
+        # param name -> operand index
+        pidx: dict[str, int] = {}
+        for ins in instrs:
+            if ins["op"] == "parameter":
+                m = re.match(r"\s*(\d+)", ins["operands"])
+                if m:
+                    pidx[ins["name"]] = int(m.group(1))
+        read = {}
+        for ins in instrs:
+            for o in self._operand_names(ins["operands"]):
+                if o not in pidx:
+                    continue
+                i = pidx[o]
+                full = (shape_bytes(operand_shapes[i])
+                        if i < len(operand_shapes) else 0)
+                if ins["op"] in ("dynamic-slice", "slice"):
+                    sz = min(shape_bytes(ins["type"]), full)
+                else:
+                    sz = full
+                read[i] = max(read.get(i, 0), sz)
+        return float(sum(read.values()))
+
+    def _instr_bytes(self, ins: dict, shp: dict) -> float:
+        """HBM traffic model per instruction (read + write).
+
+        copy / full-buffer scan bookkeeping is aliased in place on TPU, so
+        dynamic-(update-)slice ops count only the moved slice."""
+        op = ins["op"]
+        rb = shape_bytes(ins["type"])
+        if op == "dynamic-update-slice":
+            ops = self._operand_names(ins["operands"])
+            ub = shape_bytes(shp.get(ops[1], "")) if len(ops) >= 2 else rb
+            return 2 * ub
+        if op == "dynamic-slice":
+            return 2 * rb
+        if op == "fusion":
+            callee = re.search(r"calls=%?([\w\.\-]+)", ins["rest"])
+            if callee:
+                ub = self._dus_update_bytes(callee.group(1))
+                if ub:  # fused DUS (often behind a bitcast root): in-place
+                    return 2 * ub
+                # boundary: output written once, params read at slice size
+                shapes = [shp.get(o, "") for o in
+                          self._operand_names(ins["operands"])]
+                return rb + self._fusion_read_bytes(callee.group(1), shapes)
+            ob = sum(shape_bytes(shp.get(o, ""))
+                     for o in self._operand_names(ins["operands"]))
+            return rb + ob
+        if op.startswith("dot") or op in ("scatter", "gather"):
+            ob = sum(shape_bytes(shp.get(o, ""))
+                     for o in self._operand_names(ins["operands"]))
+            return rb + ob
+        # collectives + elementwise: write + one read equivalent
+        return 2 * rb
+
+    def walk(self, cname: str, costs: Costs, mult: float,
+             stack: tuple, count_bytes: bool):
+        shp = self.shapes.get(cname, {})
+        for ins in self.comps.get(cname, []):
+            op = ins["op"]
+            if op.startswith("dot"):
+                res_dims = _parse_dims(ins["type"])
+                ops = self._operand_names(ins["operands"])
+                k = 1
+                mdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}",
+                                  ins["rest"] + ins["operands"])
+                if ops and mdims and ops[0] in shp:
+                    lhs_dims = _parse_dims(shp[ops[0]])
+                    for ci in mdims.group(1).split(","):
+                        if ci and int(ci) < len(lhs_dims):
+                            k *= lhs_dims[int(ci)]
+                costs.flops += mult * 2 * _prod(res_dims) * k
+            for ck in _COLLECTIVES:
+                if op == ck or op == ck + "-start":
+                    gs, ng, dcn = _parse_groups(ins["rest"], 0, self.pod_size)
+                    operand_bytes = sum(
+                        shape_bytes(shp.get(o, "")) for o in
+                        self._operand_names(ins["operands"]))
+                    costs.collectives.append(
+                        CollectiveOp(ck, cname, operand_bytes,
+                                     shape_bytes(ins["type"]), gs, ng, dcn,
+                                     count=mult,
+                                     is_f32="f32[" in ins["type"]))
+                    break
+            if (count_bytes and op not in _BOOKKEEPING and op != "copy"
+                    and not op.endswith("-done")):
+                costs.hbm_bytes += mult * self._instr_bytes(ins, shp)
+            # recurse
+            callees: list[tuple[str, float, bool]] = []
+            if op == "while":
+                body = re.search(r"body=%?([\w\.\-]+)", ins["rest"])
+                tc = re.search(
+                    r'known_trip_count[\'\"]?:?\s*\{[\'\"]?n[\'\"]?:\s*[\'\"]?(\d+)',
+                    ins["rest"])
+                trip = float(tc.group(1)) if tc else 1.0
+                if body:
+                    callees.append((body.group(1), trip, count_bytes))
+            elif op == "fusion":
+                callee = re.search(r"calls=%?([\w\.\-]+)", ins["rest"])
+                if callee:
+                    callees.append((callee.group(1), 1.0, False))
+            elif op == "call":
+                callee = re.search(r"to_apply=%?([\w\.\-]+)", ins["rest"])
+                if callee:
+                    callees.append((callee.group(1), 1.0, count_bytes))
+            elif op == "conditional":
+                for b in re.findall(r"(?:true|false|branch)_computation[s]?="
+                                    r"\{?([\w\.\-,%\s]+)\}?", ins["rest"]):
+                    for nm in b.split(","):
+                        callees.append((nm.strip().lstrip("%"), 1.0,
+                                        count_bytes))
+            for callee, trip, cb in callees:
+                if callee in self.comps and callee not in stack:
+                    self.walk(callee, costs, mult * trip,
+                              stack + (callee,), cb)
+
+
+def analyze_text(hlo_text: str, pod_size: int = 256) -> Costs:
+    mod = _Module(hlo_text, pod_size)
+    costs = Costs()
+    if mod.entry is not None:
+        mod.walk(mod.entry, costs, 1.0, (mod.entry,), True)
+    return costs

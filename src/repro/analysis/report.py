@@ -1,0 +1,32 @@
+"""Render the EXPERIMENTS.md roofline table from dry-run JSONs."""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+
+def table(dirname: str = "experiments/dryrun", mesh: str = None) -> str:
+    rows = []
+    for f in sorted(glob.glob(f"{dirname}/*.json")):
+        d = json.load(open(f))
+        if mesh and d["mesh"] != mesh:
+            continue
+        rows.append(d)
+    rows.sort(key=lambda d: (d["arch"], d["shape"], d["mesh"]))
+    out = ["| arch | shape | mesh | compute s | memory s | collective s | "
+           "bound | peak GB/dev | MODEL/HLO | roofline |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for d in rows:
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+            f"| {d['compute_s']:.3f} | {d['memory_s']:.3f} "
+            f"| {d['collective_s']:.3f} | {d['bottleneck']} "
+            f"| {d['peak_memory_bytes']/1e9:.2f} "
+            f"| {d['useful_ratio']:.2f} | {d['roofline_fraction']:.2%} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(table(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun",
+                sys.argv[2] if len(sys.argv) > 2 else None))

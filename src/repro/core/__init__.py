@@ -1,0 +1,4 @@
+"""The paper's contribution as a first-class feature: characterization-driven
+offload (headroom probe + stressor suite + planner + in-path transforms)."""
+from repro.core.headroom import RooflineTerms, derived_headroom  # noqa: F401
+from repro.core.planner import OffloadPlan, make_plan  # noqa: F401

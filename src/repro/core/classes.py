@@ -1,0 +1,55 @@
+"""Class-level aggregation of stressor results (the paper's Fig. 8).
+
+The paper's finding: class-level averages carry standard deviations as
+large as the means, so only individual-stressor profiles are actionable.
+``aggregate`` reproduces that analysis; ``significant_classes`` returns the
+classes (if any) whose mean exceeds one standard deviation — expected to be
+few/none, matching the paper.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.stressors import Result
+
+ALL_CLASSES = ["CPU", "CPU_CACHE", "MEMORY", "VM", "NETWORK", "PIPE_IO",
+               "IO", "FILESYSTEM", "SCHEDULER", "INTERRUPT", "OS", "CRYPTO"]
+
+
+@dataclass
+class ClassSummary:
+    name: str
+    n: int
+    mean_relative: float
+    std_relative: float
+
+    @property
+    def significant(self) -> bool:
+        return self.n >= 2 and self.mean_relative > self.std_relative
+
+
+def aggregate(results: list[Result]) -> list[ClassSummary]:
+    out = []
+    for cls in ALL_CLASSES:
+        vals = [r.relative for r in results
+                if cls in r.classes and not r.skipped and r.relative]
+        if not vals:
+            continue
+        arr = np.array(vals, np.float64)
+        out.append(ClassSummary(cls, len(vals), float(arr.mean()),
+                                float(arr.std())))
+    return out
+
+
+def significant_classes(summaries: list[ClassSummary]) -> list[str]:
+    return [s.name for s in summaries if s.significant]
+
+
+def ranking(results: list[Result]) -> list[Result]:
+    """Stressors ordered by relative performance (best offload targets first),
+    the paper's Table III analogue."""
+    live = [r for r in results if not r.skipped and r.relative is not None]
+    return sorted(live, key=lambda r: -r.relative)

@@ -1,0 +1,79 @@
+"""In-path transform measurement — the embedded-function-mode experiment.
+
+The paper's Fig. 5/6: put the processor *in the data path* (embedded
+function mode) and measure how much CPU remains; compare the kernel network
+stack against a user-space stack (DPDK).
+
+TPU mapping: run an all-reduce over a mesh axis three ways and measure
+(a) wall time on this backend and (b) wire bytes per device, which on real
+hardware is the collective-term denominator:
+
+  stock      — jax.lax.pmean (XLA's collective stack = "kernel stack")
+  ring       — explicit ppermute ring            ("user-space stack")
+  int8_ring  — ring with per-hop int8 compression ("+ offloaded transform")
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import collectives as C
+
+
+@dataclass
+class InPathResult:
+    method: str
+    wall_s_per_call: float
+    wire_bytes_per_device: int
+    max_error: float
+
+
+def _wire_bytes(n: int, size: int, method: str) -> int:
+    """Per-device wire bytes for an all-reduce of `size` fp32 elements."""
+    full = size * 4
+    if method == "stock":
+        return int(2 * (n - 1) / n * full)          # ring all-reduce, fp32
+    if method == "ring":
+        return int(2 * (n - 1) / n * full)          # same schedule, explicit
+    if method == "int8_a2a":
+        return int(2 * (n - 1) / n * (size * 1 + size / max(size, 1) * 4))
+    if method == "int8_ring":
+        return int(2 * (n - 1) / n * size * 1)      # int8 on every hop
+    raise ValueError(method)
+
+
+def measure(size: int = 1 << 20, iters: int = 20) -> list[InPathResult]:
+    n = len(jax.devices())
+    if n < 2:
+        raise RuntimeError("in-path measurement needs >= 2 devices "
+                           "(run under --xla_force_host_platform_device_count)")
+    mesh = jax.make_mesh((n,), ("pod",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    x = jax.random.normal(jax.random.key(0), (n, size), jnp.float32)
+    want = jnp.mean(x, axis=0)
+
+    def run(fn, method):
+        f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P("pod"),
+                                  out_specs=P("pod"), check_vma=False))
+        out = f(x)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = f(x)
+        jax.block_until_ready(out)
+        dt = (time.perf_counter() - t0) / iters
+        err = float(jnp.max(jnp.abs(out - want[None])))
+        return InPathResult(method, dt, _wire_bytes(n, size, method), err)
+
+    return [
+        run(lambda g: jax.lax.pmean(g, "pod") + 0 * g, "stock"),
+        run(lambda g: C.ring_allreduce(g, "pod")[0], "ring"),
+        run(lambda g: C.compressed_psum(g, "pod")[0], "int8_a2a"),
+        run(lambda g: C.ring_allreduce(g, "pod", wire_int8=True)[0],
+            "int8_ring"),
+    ]

@@ -1,0 +1,84 @@
+"""Offload planner — the paper's "what is profitable to offload" decision,
+turned into configuration.
+
+Inputs: the cell's roofline terms (from the dry-run) + the stressor
+profitability ranking (from the suite).  Output: an ``OffloadPlan`` that
+configures the training step — the paper's Table III, made executable.
+
+Decision rules (each traceable to a paper finding, see DESIGN.md section 6):
+  1. collective-bound + compute headroom  -> in-path int8 compression
+     (paper: offload transparent compression/encryption into the path).
+  2. compute-bound -> nothing extra in-path (paper: the BF-2's cores cannot
+     even saturate the link through the kernel stack; don't add work).
+  3. memory-bound  -> prefer dots_saveable remat (recompute less, keep
+     matmul outputs) and larger microbatches.
+  4. quant kernel placement: use the Pallas int8 kernel only if the quant
+     stressor shows the device beats the reference platform (paper: offload
+     only operations the device is relatively good at).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.classes import ranking
+from repro.core.headroom import RooflineTerms, derived_headroom
+from repro.core.stressors import Result
+
+
+@dataclass
+class OffloadPlan:
+    dp_method: str = "stock"
+    use_quant_kernel: bool = False
+    remat: str = "full"
+    microbatches: int = 1
+    notes: list = field(default_factory=list)
+    ranking: list = field(default_factory=list)
+
+
+def make_plan(terms: RooflineTerms, stressor_results: list[Result],
+              multi_pod: bool = True,
+              bytes_per_device: Optional[float] = None,
+              hbm_bytes: float = 16e9) -> OffloadPlan:
+    plan = OffloadPlan()
+    hr = derived_headroom(terms)
+    plan.notes.append(f"bottleneck={hr['bottleneck']} "
+                      f"headroom={hr['headroom_fraction']:.1%} "
+                      f"({hr['free_offload_gflops']:.1f} GFLOP free per step)")
+
+    rank = ranking(stressor_results)
+    plan.ranking = [(r.name, r.relative) for r in rank]
+    by_name = {r.name: r for r in rank}
+
+    # rule 1/2: in-path compression across the slow axis
+    if multi_pod and hr["bottleneck"] == "collective" \
+            and hr["headroom_fraction"] > 0.05:
+        plan.dp_method = "int8_a2a"
+        plan.notes.append("collective-bound with headroom: int8 in-path "
+                          "gradient compression enabled (paper sec. III-B3: "
+                          "transparent compression is a profitable offload)")
+    else:
+        plan.notes.append("in-path compression NOT enabled "
+                          "(paper sec. II-B1: don't add work to a saturated "
+                          "processor)" if hr["bottleneck"] == "compute" else
+                          "in-path compression not needed (not collective-bound)")
+
+    # rule 3: memory pressure
+    if hr["bottleneck"] == "memory" or (
+            bytes_per_device is not None and bytes_per_device > 0.75 * hbm_bytes):
+        plan.remat = "full"
+        plan.microbatches = 2
+        plan.notes.append("memory-pressured: full remat + 2 microbatches")
+    elif hr["bottleneck"] == "compute":
+        plan.remat = "dots_saveable"
+        plan.notes.append("compute-bound: dots_saveable remat (don't "
+                          "recompute matmuls)")
+
+    # rule 4: quant kernel only where the device is relatively strong
+    q = by_name.get("quant-int8")
+    if q is not None and q.relative is not None and q.relative > 1.0:
+        plan.use_quant_kernel = True
+        plan.notes.append(
+            f"quant-int8 stressor relative={q.relative:.1f}x reference: "
+            "Pallas quant kernel placed in the collective path")
+    return plan

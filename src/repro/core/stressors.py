@@ -1,0 +1,443 @@
+"""Stressor suite — the stress-ng analogue for a JAX/TPU runtime.
+
+Mirrors the paper's methodology (section III): a battery of small
+single-purpose "stressors", each thrashing one aspect of the runtime,
+reporting bogo-ops/s.  Results are normalized against a *reference
+platform* implementation (single-thread numpy — our RPi4 analogue), so
+cross-stressor numbers are comparable the same way the paper's Fig. 7 is.
+
+Stressors that need capabilities the runtime lacks (e.g. collective
+stressors on a single-device host) are SKIPPED and reported as such —
+exactly like stress-ng's ``rdrand`` on the BlueField's ARM cores.
+
+Classes follow the paper's taxonomy, re-interpreted for the TPU stack:
+  CPU        -> MXU/VPU compute            CPU_CACHE -> small-working-set ops
+  MEMORY     -> HBM-bandwidth streaming    VM        -> layout/copy/reshape
+  NETWORK    -> collectives                PIPE_IO   -> host<->device transfer
+  IO         -> checkpoint (disk)          FILESYSTEM-> checkpoint metadata
+  SCHEDULER  -> dispatch/compile           INTERRUPT -> host callbacks
+  OS         -> runtime services (jit)     CRYPTO    -> PRNG / hashing / quant
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Stressor:
+    name: str
+    classes: tuple[str, ...]
+    make: Callable[[], Callable[[], object]]        # device op
+    make_ref: Optional[Callable[[], Callable[[], object]]]  # numpy reference
+    work_items: int = 1                              # ops per invocation
+    requires_devices: int = 1
+
+
+@dataclass
+class Result:
+    name: str
+    classes: tuple[str, ...]
+    bogo_ops_per_sec: float
+    ref_ops_per_sec: Optional[float]
+    relative: Optional[float]
+    skipped: bool = False
+    reason: str = ""
+
+
+def _timeit(fn: Callable[[], object], duration: float) -> float:
+    """Run fn repeatedly for ~duration seconds; return calls/sec."""
+    fn()  # warmup / compile
+    n, t0 = 0, time.perf_counter()
+    deadline = t0 + duration
+    while time.perf_counter() < deadline:
+        out = fn()
+        n += 1
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    elif isinstance(out, (list, tuple)) and hasattr(out[0], "block_until_ready"):
+        out[0].block_until_ready()
+    return n / (time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# stressor definitions
+# ---------------------------------------------------------------------------
+
+def _registry() -> list[Stressor]:
+    S: list[Stressor] = []
+    key = jax.random.key(0)
+
+    def add(name, classes, make, make_ref=None, work=1, devices=1):
+        S.append(Stressor(name, tuple(classes), make, make_ref, work, devices))
+
+    # ---- CPU (compute) ----
+    def mk_matmul(n, dtype):
+        def m():
+            a = jnp.ones((n, n), dtype)
+            f = jax.jit(lambda a: a @ a)
+            return lambda: f(a)
+        return lambda: m()
+
+    add("matmul-512-f32", ["CPU"], mk_matmul(512, jnp.float32),
+        lambda: (lambda a=np.ones((512, 512), np.float32): (lambda: a @ a))())
+    add("matmul-512-bf16", ["CPU"], mk_matmul(512, jnp.bfloat16),
+        lambda: (lambda a=np.ones((512, 512), np.float32): (lambda: a @ a))())
+    add("matmul-odd-513", ["CPU"], mk_matmul(513, jnp.float32),
+        lambda: (lambda a=np.ones((513, 513), np.float32): (lambda: a @ a))())
+
+    def mk_vecmath():
+        x = jnp.linspace(0.1, 1.0, 1 << 16)
+        f = jax.jit(lambda x: jnp.sin(x) * jnp.exp(x) + jnp.sqrt(x))
+        return lambda: f(x)
+
+    def mk_vecmath_ref():
+        x = np.linspace(0.1, 1.0, 1 << 16).astype(np.float32)
+        return lambda: np.sin(x) * np.exp(x) + np.sqrt(x)
+
+    add("vecmath", ["CPU"], mk_vecmath, mk_vecmath_ref)
+
+    def mk_branchless():
+        x = jnp.arange(1 << 16) % 7
+        f = jax.jit(lambda x: jnp.where(x > 3, x * 3, x + 1).sum())
+        return lambda: f(x)
+
+    def mk_branchless_ref():
+        x = np.arange(1 << 16) % 7
+        return lambda: np.where(x > 3, x * 3, x + 1).sum()
+
+    add("branch-select", ["CPU"], mk_branchless, mk_branchless_ref)
+
+    # ---- CRYPTO-ish: PRNG / hashing / quantization ----
+    def mk_prng():
+        f = jax.jit(lambda k: jax.random.bits(k, (1 << 16,)))
+        return lambda: f(key)
+
+    def mk_prng_ref():
+        rng = np.random.Generator(np.random.Philox(7))
+        return lambda: rng.integers(0, 2**32, 1 << 16, dtype=np.uint32)
+
+    add("prng-bits", ["CPU", "CRYPTO"], mk_prng, mk_prng_ref)
+
+    def mk_quant():
+        from repro.kernels import ref as kref
+        x = jax.random.normal(key, (256, 1024))
+        f = jax.jit(lambda x: kref.quantize_int8_ref(x)[0])
+        return lambda: f(x)
+
+    def mk_quant_ref():
+        x = np.random.randn(256, 1024).astype(np.float32)
+        def q():
+            s = np.maximum(np.abs(x).max(-1, keepdims=True), 1e-12) / 127
+            return np.clip(np.round(x / s), -127, 127).astype(np.int8)
+        return q
+
+    add("quant-int8", ["CPU", "CRYPTO", "MEMORY"], mk_quant, mk_quant_ref)
+
+    def mk_hash():
+        x = jnp.arange(1 << 16, dtype=jnp.uint32)
+        def h(x):
+            x = (x ^ (x >> 16)) * jnp.uint32(0x45D9F3B)
+            x = (x ^ (x >> 16)) * jnp.uint32(0x45D9F3B)
+            return x ^ (x >> 16)
+        f = jax.jit(h)
+        return lambda: f(x)
+
+    def mk_hash_ref():
+        x = np.arange(1 << 16, dtype=np.uint32)
+        def h():
+            y = (x ^ (x >> 16)) * np.uint32(0x45D9F3B)
+            y = (y ^ (y >> 16)) * np.uint32(0x45D9F3B)
+            return y ^ (y >> 16)
+        return h
+
+    add("hash-mix", ["CPU", "CRYPTO"], mk_hash, mk_hash_ref)
+
+    # ---- MEMORY ----
+    def mk_stream(n):
+        def m():
+            x = jnp.ones((n,), jnp.float32)
+            f = jax.jit(lambda x: x * 2.0 + 1.0)
+            return lambda: f(x)
+        return lambda: m()
+
+    add("memrate-64m", ["MEMORY"], mk_stream(1 << 24),
+        lambda: (lambda x=np.ones(1 << 24, np.float32): (lambda: x * 2.0 + 1.0))())
+    add("memrate-1m", ["MEMORY", "CPU_CACHE"], mk_stream(1 << 18),
+        lambda: (lambda x=np.ones(1 << 18, np.float32): (lambda: x * 2.0 + 1.0))())
+
+    def mk_transpose():
+        x = jnp.ones((2048, 2048))
+        f = jax.jit(lambda x: x.T.copy() if hasattr(x.T, "copy") else jnp.array(x.T))
+        return lambda: f(x)
+
+    add("transpose-copy", ["MEMORY", "VM"], mk_transpose,
+        lambda: (lambda x=np.ones((2048, 2048), np.float32):
+                 (lambda: np.ascontiguousarray(x.T)))())
+
+    def mk_gather():
+        x = jnp.ones((1 << 16, 64))
+        idx = jax.random.randint(key, (1 << 14,), 0, 1 << 16)
+        f = jax.jit(lambda x, i: x[i])
+        return lambda: f(x, idx)
+
+    def mk_gather_ref():
+        x = np.ones((1 << 16, 64), np.float32)
+        idx = np.random.randint(0, 1 << 16, 1 << 14)
+        return lambda: x[idx]
+
+    add("gather-rows", ["MEMORY", "VM"], mk_gather, mk_gather_ref)
+
+    def mk_scatter():
+        x = jnp.zeros((1 << 16, 64))
+        idx = jax.random.randint(key, (1 << 14,), 0, 1 << 16)
+        upd = jnp.ones((1 << 14, 64))
+        f = jax.jit(lambda x, i, u: x.at[i].add(u))
+        return lambda: f(x, idx, upd)
+
+    def mk_scatter_ref():
+        idx = np.random.randint(0, 1 << 16, 1 << 14)
+        upd = np.ones((1 << 14, 64), np.float32)
+        def s():
+            x = np.zeros((1 << 16, 64), np.float32)
+            np.add.at(x, idx, upd)
+            return x
+        return s
+
+    add("scatter-add", ["MEMORY", "VM"], mk_scatter, mk_scatter_ref)
+
+    # ---- CPU_CACHE ----
+    def mk_small_loop():
+        x = jnp.full((128, 128), 0.005)
+        f = jax.jit(lambda x: jax.lax.fori_loop(0, 64, lambda i, a: a @ x, x))
+        return lambda: f(x)
+
+    def mk_small_loop_ref():
+        x = np.full((128, 128), 0.005, np.float32)
+        def l():
+            a = x
+            for _ in range(64):
+                a = a @ x
+            return a
+        return l
+
+    add("cache-chain-matmul", ["CPU_CACHE", "CPU"], mk_small_loop,
+        mk_small_loop_ref, work=64)
+
+    # ---- scan / sort / search (CPU class in the paper) ----
+    def mk_scan():
+        x = jnp.ones((1 << 20,))
+        f = jax.jit(jnp.cumsum)
+        return lambda: f(x)
+
+    add("assoc-scan", ["CPU", "MEMORY"], mk_scan,
+        lambda: (lambda x=np.ones(1 << 20, np.float32): (lambda: np.cumsum(x)))())
+
+    def mk_sort():
+        x = jax.random.normal(key, (1 << 16,))
+        f = jax.jit(jnp.sort)
+        return lambda: f(x)
+
+    def mk_sort_ref():
+        x = np.random.randn(1 << 16).astype(np.float32)
+        return lambda: np.sort(x)
+
+    add("sort-64k", ["CPU"], mk_sort, mk_sort_ref)
+
+    def mk_topk():
+        x = jax.random.normal(key, (256, 4096))
+        f = jax.jit(lambda x: jax.lax.top_k(x, 8))
+        return lambda: f(x)
+
+    def mk_topk_ref():
+        x = np.random.randn(256, 4096).astype(np.float32)
+        return lambda: np.argpartition(x, -8, axis=-1)[:, -8:]
+
+    add("topk-router", ["CPU"], mk_topk, mk_topk_ref)
+
+    # ---- VM (layout churn) ----
+    def mk_reshape_churn():
+        x = jnp.ones((64, 64, 64))
+        f = jax.jit(lambda x: x.transpose(2, 0, 1).reshape(64, -1)
+                    .T.reshape(64, 64, 64).transpose(1, 2, 0))
+        return lambda: f(x)
+
+    def mk_reshape_ref():
+        x = np.ones((64, 64, 64), np.float32)
+        return lambda: np.ascontiguousarray(
+            np.ascontiguousarray(x.transpose(2, 0, 1)).reshape(64, -1)
+            .T).reshape(64, 64, 64).transpose(1, 2, 0)
+
+    add("layout-churn", ["VM", "MEMORY"], mk_reshape_churn, mk_reshape_ref)
+
+    def mk_pad_slice():
+        x = jnp.ones((1000, 1000))
+        f = jax.jit(lambda x: jnp.pad(x, ((12, 12), (12, 12)))[7:-7, 7:-7])
+        return lambda: f(x)
+
+    add("pad-slice", ["VM", "MEMORY"], mk_pad_slice,
+        lambda: (lambda x=np.ones((1000, 1000), np.float32):
+                 (lambda: np.pad(x, 12)[7:-7, 7:-7]))())
+
+    # ---- PIPE_IO: host <-> device ----
+    def mk_h2d():
+        x = np.ones((1 << 20,), np.float32)
+        return lambda: jax.device_put(x)
+
+    add("h2d-transfer", ["PIPE_IO"], mk_h2d,
+        lambda: (lambda x=np.ones(1 << 20, np.float32): (lambda: x.copy()))())
+
+    def mk_d2h():
+        x = jax.device_put(np.ones((1 << 20,), np.float32))
+        return lambda: np.asarray(x)
+
+    add("d2h-transfer", ["PIPE_IO"], mk_d2h,
+        lambda: (lambda x=np.ones(1 << 20, np.float32): (lambda: x.copy()))())
+
+    # ---- INTERRUPT: host callbacks ----
+    def mk_callback():
+        def cb(x):
+            return x + 1.0
+        f = jax.jit(lambda x: jax.pure_callback(
+            cb, jax.ShapeDtypeStruct((16,), jnp.float32), x))
+        x = jnp.ones((16,))
+        return lambda: f(x)
+
+    add("host-callback", ["INTERRUPT", "OS"], mk_callback,
+        lambda: (lambda x=np.ones(16, np.float32): (lambda: x + 1.0))())
+
+    # ---- SCHEDULER: dispatch overhead ----
+    def mk_dispatch():
+        f = jax.jit(lambda x: x + 1)
+        x = jnp.zeros(())
+        return lambda: f(x)
+
+    add("dispatch-noop", ["SCHEDULER", "OS"], mk_dispatch,
+        lambda: (lambda: (lambda: None))())
+
+    def mk_manytiny():
+        f = jax.jit(lambda x: x + 1)
+        xs = [jnp.zeros(()) for _ in range(32)]
+        def run():
+            for x in xs:
+                out = f(x)
+            return out
+        return run
+
+    add("dispatch-storm", ["SCHEDULER", "OS"], mk_manytiny, None, work=32)
+
+    # ---- OS: compilation as a runtime service ----
+    def mk_compile():
+        counter = [0]
+        def run():
+            counter[0] += 1
+            c = counter[0]
+            return jax.jit(lambda x: x * c + c).lower(
+                jax.ShapeDtypeStruct((8,), jnp.float32)).compile()
+        return run
+
+    add("jit-compile", ["OS"], mk_compile, None)
+
+    # ---- IO / FILESYSTEM: checkpoint path ----
+    def mk_ckpt_io():
+        tmp = tempfile.mkdtemp(prefix="stress_io_")
+        x = np.ones((1 << 18,), np.float32)
+        def run():
+            p = os.path.join(tmp, "a.npy")
+            np.save(p, x)
+            return np.load(p)
+        return run
+
+    add("ckpt-write-read", ["IO"], mk_ckpt_io,
+        None)
+
+    def mk_meta():
+        tmp = tempfile.mkdtemp(prefix="stress_fs_")
+        def run():
+            p = os.path.join(tmp, "m.json")
+            with open(p, "w") as f:
+                json.dump({"step": 1, "leaves": {str(i): i for i in range(64)}}, f)
+            with open(p) as f:
+                return json.load(f)
+        return run
+
+    add("ckpt-metadata", ["FILESYSTEM"], mk_meta, None)
+
+    # ---- NETWORK: collectives (need >= 2 devices) ----
+    def mk_psum():
+        from jax.sharding import PartitionSpec as P
+        n = len(jax.devices())
+        mesh = jax.make_mesh((n,), ("x",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        x = jnp.ones((n, 1 << 16))
+        f = jax.jit(jax.shard_map(
+            lambda x: jax.lax.psum(x, "x"), mesh=mesh,
+            in_specs=P("x"), out_specs=P()))
+        return lambda: f(x)
+
+    add("allreduce", ["NETWORK"], mk_psum, None, devices=2)
+
+    def mk_a2a():
+        from jax.sharding import PartitionSpec as P
+        n = len(jax.devices())
+        mesh = jax.make_mesh((n,), ("x",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        x = jnp.ones((n, n, 1 << 12))
+        f = jax.jit(jax.shard_map(
+            lambda x: jax.lax.all_to_all(x, "x", 1, 0, tiled=False),
+            mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+        return lambda: f(x)
+
+    add("all-to-all", ["NETWORK"], mk_a2a, None, devices=2)
+
+    def mk_compressed_ar():
+        from jax.sharding import PartitionSpec as P
+        from repro.parallel import collectives as C
+        n = len(jax.devices())
+        mesh = jax.make_mesh((n,), ("x",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        x = jnp.ones((n, 1 << 16))
+        f = jax.jit(jax.shard_map(
+            lambda x: C.compressed_psum(x, "x")[0], mesh=mesh,
+            in_specs=P("x"), out_specs=P("x"), check_vma=False))
+        return lambda: f(x)
+
+    add("allreduce-int8", ["NETWORK", "CRYPTO"], mk_compressed_ar, None,
+        devices=2)
+
+    return S
+
+
+def run_suite(duration: float = 0.5, names: Optional[list[str]] = None,
+              with_reference: bool = True) -> list[Result]:
+    results = []
+    for s in _registry():
+        if names and s.name not in names:
+            continue
+        if len(jax.devices()) < s.requires_devices:
+            results.append(Result(s.name, s.classes, 0.0, None, None,
+                                  skipped=True,
+                                  reason=f"needs >= {s.requires_devices} devices"))
+            continue
+        try:
+            fn = s.make()
+            ops = _timeit(fn, duration) * s.work_items
+            ref_ops = rel = None
+            if with_reference and s.make_ref is not None:
+                rfn = s.make_ref()
+                ref_ops = _timeit(rfn, duration) * s.work_items
+                rel = ops / ref_ops if ref_ops else None
+            results.append(Result(s.name, s.classes, ops, ref_ops, rel))
+        except Exception as e:  # capability-missing, like stress-ng skips
+            results.append(Result(s.name, s.classes, 0.0, None, None,
+                                  skipped=True, reason=f"{type(e).__name__}: {e}"))
+    return results

@@ -1,0 +1,104 @@
+"""FlashAttention-2 forward Pallas TPU kernel (causal + sliding window, GQA).
+
+Tiling: grid (B*H, S/block_q, S/block_k), kv innermost so the online-softmax
+carry (acc, m, l) lives in VMEM scratch across kv steps.  Blocks are
+(block_q, hd) / (block_k, hd) — hd is 128-aligned for every assigned arch,
+block sizes default to 128 to match the MXU.  GQA is handled in the k/v
+BlockSpec index maps (kv head = q head // rep), so kv tiles are fetched from
+the smaller Kv-head tensor without materializing the repeat.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                sm_scale, causal, window, block_q, block_k, n_k):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32) * sm_scale          # (bq, hd)
+    k = k_ref[...].astype(jnp.float32)                     # (bk, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                    # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)           # (bq, bk); the
+    # where guards fully-masked blocks (m_new = -inf -> exp(0) = 1 otherwise)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+    v = v_ref[...].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, window=0, sm_scale=None,
+                        block_q=128, block_k=128, interpret=True):
+    """q: (B, S, H, hd); k, v: (B, S, Kv, hd) -> (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    Kv = k.shape[2]
+    rep = H // Kv
+    sm_scale = sm_scale if sm_scale is not None else hd ** -0.5
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    n_q, n_k = S // block_q, S // block_k
+
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * Kv, S, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * Kv, S, hd)
+
+    grid = (B * H, n_q, n_k)
+    kern = functools.partial(
+        _fwd_kernel, sm_scale=sm_scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_k=n_k)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((None, block_k, hd),
+                         lambda bh, qi, ki, rep=rep: (bh // rep, ki, 0)),
+            pl.BlockSpec((None, block_k, hd),
+                         lambda bh, qi, ki, rep=rep: (bh // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, hd),
+                               lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,52 @@
+"""Public jit'd wrappers for the Pallas kernels, with policy dispatch.
+
+On real TPUs ``runtime.policy()['pallas_interpret']`` is False and the
+kernels compile to Mosaic; on this CPU container they run in interpret mode
+and are validated against kernels/ref.py in tests.  The model code calls
+these through runtime.policy() switches (see models/attention.py,
+models/rwkv6.py, parallel/collectives.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro import runtime
+from repro.kernels import flash_attention as _fa
+from repro.kernels import quant as _q
+from repro.kernels import ref as _ref
+from repro.kernels import rwkv6_scan as _rs
+
+
+def _interp() -> bool:
+    return bool(runtime.policy()["pallas_interpret"])
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, window=0,
+                    block_q=128, block_k=128):
+    return _fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                   block_q=block_q, block_k=block_k,
+                                   interpret=_interp())
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def rwkv6_scan(r, k, v, w, u, s0=None, *, chunk=64):
+    return _rs.rwkv6_scan_fwd(r, k, v, w, u, s0, chunk=chunk,
+                              interpret=_interp())
+
+
+@jax.jit
+def quantize_int8(x):
+    if runtime.policy()["quant_impl"] == "pallas":
+        return _q.quantize_int8(x, interpret=_interp())
+    return _ref.quantize_int8_ref(x)
+
+
+@partial(jax.jit, static_argnames=("dtype",))
+def dequantize_int8(q, scale, dtype=jnp.float32):
+    if runtime.policy()["quant_impl"] == "pallas":
+        return _q.dequantize_int8(q, scale, dtype=dtype, interpret=_interp())
+    return _ref.dequantize_int8_ref(q, scale).astype(dtype)

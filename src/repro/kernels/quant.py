@@ -1,0 +1,63 @@
+"""int8 quantize/dequantize Pallas TPU kernels.
+
+The compute hot-spot of the in-path gradient compression (the paper's
+offloaded transform).  Rowwise symmetric scales; blocks (block_rows, C)
+stream through VMEM so the transform runs at HBM bandwidth.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = (q_ref[...].astype(jnp.float32) * s_ref[...]).astype(
+        x_ref.dtype)
+
+
+def quantize_int8(x, *, block_rows=256, interpret=True):
+    """x: (N, C) -> (q int8 (N, C), scale fp32 (N, 1))."""
+    N, C = x.shape
+    block_rows = min(block_rows, N)
+    assert N % block_rows == 0, (N, block_rows)
+    grid = (N // block_rows,)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, C), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+                   pl.BlockSpec((block_rows, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((N, C), jnp.int8),
+                   jax.ShapeDtypeStruct((N, 1), jnp.float32)],
+        interpret=interpret,
+    )(x)
+
+
+def dequantize_int8(q, scale, dtype=jnp.float32, *, block_rows=256,
+                    interpret=True):
+    """q: (N, C) int8, scale: (N, 1) -> (N, C) dtype."""
+    N, C = q.shape
+    block_rows = min(block_rows, N)
+    assert N % block_rows == 0, (N, block_rows)
+    grid = (N // block_rows,)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, C), dtype),
+        interpret=interpret,
+    )(q, scale)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, sm_scale=None):
+    """Naive full-softmax GQA attention.
+
+    q: (B, S, H, hd); k, v: (B, Sk, Kv, hd).  Returns (B, S, H, hd).
+    """
+    B, S, H, hd = q.shape
+    Kv = k.shape[2]
+    rep = H // Kv
+    sm_scale = sm_scale if sm_scale is not None else hd ** -0.5
+    qh = q.reshape(B, S, Kv, rep, hd).astype(jnp.float32) * sm_scale
+    scores = jnp.einsum("bqgrh,bsgh->bgrqs", qh, k.astype(jnp.float32))
+    Sk = k.shape[1]
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((S, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqs,bsgh->bqgrh", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0=None):
+    """Naive per-step WKV-6 recurrence.
+
+    r,k,v,w: (B, T, H, dh) fp32 (w in (0,1)); u: (H, dh).
+    Returns (y (B,T,H,dh), S_T (B,H,dh,dh))."""
+    B, T, H, dh = r.shape
+    S = jnp.zeros((B, H, dh, dh), jnp.float32) if s0 is None else s0
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp              # (B,H,dh)
+        y = jnp.einsum("bhd,bhde->bhe", rt, S)
+        y += jnp.sum(rt * u * kt, -1, keepdims=True) * vt
+        S = wt[..., None] * S + kt[..., None] * vt[:, :, None, :]
+        return S, y
+
+    xs = jax.tree_util.tree_map(lambda z: z.swapaxes(0, 1), (r, k, v, w))
+    S, ys = jax.lax.scan(step, S, xs)
+    return ys.swapaxes(0, 1), S
+
+
+def quantize_int8_ref(x):
+    """Rowwise symmetric int8 quantization.  x: (..., C)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize_int8_ref(q, scale):
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,40 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state.  The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to fabricate the placeholder devices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import math
+    import numpy as np
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    # single-pod mesh carved out of the 512 placeholder devices
+    assert len(devs) >= n, (len(devs), n)
+    grid = np.array(devs[:n]).reshape(shape)
+    return jax.sharding.Mesh(
+        grid, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests, CPU-scale examples)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over however many local devices exist."""
+    n = n_data * n_model
+    assert len(jax.devices()) >= n, (len(jax.devices()), n)
+    return make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,220 @@
+"""Grouped-query attention: chunked full-sequence path + KV-cache decode path.
+
+Full-sequence attention never materializes the (S x S) score matrix: queries
+are processed in chunks via ``lax.scan`` (scores per chunk are (B, Kv, rep,
+cq, S)).  This is the XLA-expressible equivalent of the Pallas flash kernel in
+kernels/flash_attention.py (which is used on real TPU hardware); XLA cost
+analysis multiplies scan bodies by trip count so roofline FLOPs stay correct.
+
+Decode keeps a cache of shape (B, S_cache, Kv, hd) plus a per-slot position
+vector; sliding-window attention uses the cache as a ring buffer
+(slot = position % window), which makes the long_500k cell O(window) memory.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import runtime
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.parallel import sharding
+
+NEG_INF = -1e30
+
+
+def attn_init(rng, cfg: ArchConfig) -> dict:
+    H, Kv, hd, D = cfg.num_heads, cfg.num_kv_heads, cfg.hd, cfg.d_model
+    dt = common.dtype_of(cfg)
+    ks = jax.random.split(rng, 4)
+    return {
+        "q": common.dense_init(ks[0], D, H * hd, dt, cfg.use_bias),
+        "k": common.dense_init(ks[1], D, Kv * hd, dt, cfg.use_bias),
+        "v": common.dense_init(ks[2], D, Kv * hd, dt, cfg.use_bias),
+        "o": common.dense_init(ks[3], H * hd, D, dt, cfg.use_bias,
+                               scale=float((H * hd) ** -0.5)),
+    }
+
+
+def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _chunk_size(seq: int) -> int:
+    if seq <= 1024:
+        return seq
+    return 256 if seq >= 16384 else 512
+
+
+def _gqa_scores(q, k):
+    """q: (B, cq, Kv, rep, hd), k: (B, S, Kv, hd) -> (B, Kv, rep, cq, S) fp32."""
+    return jnp.einsum("bqgrh,bsgh->bgrqs", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_out(probs, v):
+    """probs: (B, Kv, rep, cq, S), v: (B, S, Kv, hd) -> (B, cq, Kv, rep, hd)."""
+    return jnp.einsum("bgrqs,bsgh->bqgrh", probs.astype(v.dtype), v)
+
+
+def _softmax_masked(scores: jax.Array, mask: jax.Array) -> jax.Array:
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - jax.lax.stop_gradient(m))
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def attn_apply(cfg: ArchConfig, p: dict, x: jax.Array, *,
+               positions: jax.Array, causal: bool = True,
+               window: int = 0, kv_x: Optional[jax.Array] = None,
+               kv_positions: Optional[jax.Array] = None,
+               use_rope: bool = True, return_cache: bool = False,
+               cache_len: Optional[int] = None):
+    """Full-sequence attention (training / prefill / encoder / cross).
+
+    x: (B, S, D); kv_x: keys/values source for cross-attention (default x).
+    positions: (S,) absolute positions of queries.
+    Returns y (B, S, D) and, if return_cache, the (k, v, pos) cache triple.
+    """
+    H, Kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    rep = H // Kv
+    B, S, _ = x.shape
+    kv_src = x if kv_x is None else kv_x
+    kv_pos = positions if kv_positions is None else kv_positions
+    Sk = kv_src.shape[1]
+
+    q = _split_heads(common.dense(p["q"], x), H, hd)          # (B,S,H,hd)
+    k = _split_heads(common.dense(p["k"], kv_src), Kv, hd)    # (B,Sk,Kv,hd)
+    v = _split_heads(common.dense(p["v"], kv_src), Kv, hd)
+    if use_rope:
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, kv_pos, cfg.rope_theta)
+    q = sharding.constrain(q, "batch", "seq", "heads", None)
+    k = sharding.constrain(k, "batch", "seq", None, None)
+    v = sharding.constrain(v, "batch", "seq", None, None)
+
+    if (runtime.policy()["attention_impl"] == "pallas" and kv_x is None
+            and S == Sk):
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=causal, window=window,
+                                   block_q=min(128, S), block_k=min(128, S))
+        out = out.reshape(B, S, H * hd)
+        out = sharding.constrain(out, "batch", "seq", "heads")
+        y = common.dense(p["o"], out)
+        if not return_cache:
+            return y
+        cache = _make_prefill_cache(cfg, k, v, kv_pos, window,
+                                    cache_len or k.shape[1])
+        return y, cache
+
+    q = q.reshape(B, S, Kv, rep, hd) * (hd ** -0.5)
+
+    cq = _chunk_size(S)
+    n_chunks = S // cq
+    assert S % cq == 0, (S, cq)
+
+    def chunk_body(_, inputs):
+        qc, pos_q = inputs                                     # (B,cq,Kv,rep,hd), (cq,)
+        scores = _gqa_scores(qc, k)                            # (B,Kv,rep,cq,Sk)
+        mask = jnp.ones((cq, Sk), dtype=bool)
+        if causal:
+            mask &= kv_pos[None, :] <= pos_q[:, None]
+        if window:
+            mask &= kv_pos[None, :] > pos_q[:, None] - window
+        probs = _softmax_masked(scores, mask[None, None, None])
+        out = _gqa_out(probs, v)                               # (B,cq,Kv,rep,hd)
+        return (), out
+
+    q_chunks = q.reshape(B, n_chunks, cq, Kv, rep, hd).swapaxes(0, 1)
+    pos_chunks = positions.reshape(n_chunks, cq)
+    _, out = jax.lax.scan(chunk_body, (), (q_chunks, pos_chunks))
+    out = out.swapaxes(0, 1).reshape(B, S, H * hd)
+    out = sharding.constrain(out, "batch", "seq", "heads")
+    y = sharding.constrain(common.dense(p["o"], out),
+                           "batch", "seq_sp", None)
+    if not return_cache:
+        return y
+    cache = _make_prefill_cache(cfg, k, v, kv_pos, window,
+                                cache_len or k.shape[1])
+    return y, cache
+
+
+def _make_prefill_cache(cfg, k, v, kv_pos, window, cache_len):
+    """Cache from prefill keys/values, sized for continued decoding.
+
+    SWA keeps the last ``window`` slots as a ring (slot = position % window);
+    full attention pads out to ``cache_len`` (pos = -1 marks empty slots)."""
+    S = k.shape[1]
+    kv_pos = kv_pos.astype(jnp.int32)
+    if window:
+        target = window            # ring buffer: slot = position % window
+        if S > window:
+            k, v, kv_pos = k[:, -window:], v[:, -window:], kv_pos[-window:]
+            r = S % window
+            if r:
+                k = jnp.roll(k, r, axis=1)
+                v = jnp.roll(v, r, axis=1)
+                kv_pos = jnp.roll(kv_pos, r, axis=0)
+    else:
+        target = max(cache_len, S)
+    if k.shape[1] < target:
+        pad = target - k.shape[1]
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=-1)
+    return {
+        "k": _constrain_cache(k), "v": _constrain_cache(v),
+        "pos": kv_pos,
+    }
+
+
+def _constrain_cache(c):
+    return sharding.constrain(c, "batch", "cache_seq", None, None)
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int) -> dict:
+    """Empty decode cache. cache_len is the ring size for SWA layers."""
+    Kv, hd = cfg.num_kv_heads, cfg.hd
+    dt = common.dtype_of(cfg)
+    zeros = jnp.zeros((batch, cache_len, Kv, hd), dt)
+    return {"k": _constrain_cache(zeros), "v": _constrain_cache(zeros),
+            "pos": jnp.full((cache_len,), -1, jnp.int32)}
+
+
+def attn_decode(cfg: ArchConfig, p: dict, x: jax.Array, cache: dict, *,
+                index: jax.Array, window: int = 0, use_rope: bool = True):
+    """One-token decode step.  x: (B, 1, D); index: scalar current position."""
+    H, Kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    rep = H // Kv
+    B = x.shape[0]
+    S = cache["k"].shape[1]
+
+    q = _split_heads(common.dense(p["q"], x), H, hd)
+    k = _split_heads(common.dense(p["k"], x), Kv, hd)
+    v = _split_heads(common.dense(p["v"], x), Kv, hd)
+    pos = jnp.full((1,), index, jnp.int32)
+    if use_rope:
+        q = common.apply_rope(q, pos, cfg.rope_theta)
+        k = common.apply_rope(k, pos, cfg.rope_theta)
+
+    slot = (index % window) if window else index
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"],
+                                        pos.astype(jnp.int32), (slot,))
+    ck, cv = _constrain_cache(ck), _constrain_cache(cv)
+
+    qh = q.reshape(B, 1, Kv, rep, hd) * (hd ** -0.5)
+    scores = _gqa_scores(qh, ck)                               # (B,Kv,rep,1,S)
+    valid = (cpos >= 0) & (cpos <= index)
+    if window:
+        valid &= cpos > index - window
+    probs = _softmax_masked(scores, valid[None, None, None, None, :])
+    out = _gqa_out(probs, cv).reshape(B, 1, H * hd)
+    y = common.dense(p["o"], out)
+    new_cache = {"k": ck, "v": cv, "pos": cpos}
+    return y, new_cache

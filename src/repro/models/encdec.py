@@ -1,0 +1,193 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, T_frames, d_model) which feed the encoder
+directly (after a linear ``frame_proj``).  Positions are fixed sinusoids (no
+RoPE), activations are GELU, norms are parametric LayerNorm.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import attention, common, mlp
+from repro.parallel import sharding
+
+
+def _enc_layer_init(rng, cfg):
+    ks = jax.random.split(rng, 2)
+    return {"norm1": common.norm_init(cfg),
+            "attn": attention.attn_init(ks[0], cfg),
+            "norm2": common.norm_init(cfg),
+            "mlp": mlp.mlp_init(ks[1], cfg)}
+
+
+def _dec_layer_init(rng, cfg):
+    ks = jax.random.split(rng, 3)
+    return {"norm1": common.norm_init(cfg),
+            "attn": attention.attn_init(ks[0], cfg),
+            "norm2": common.norm_init(cfg),
+            "xattn": attention.attn_init(ks[1], cfg),
+            "norm3": common.norm_init(cfg),
+            "mlp": mlp.mlp_init(ks[2], cfg)}
+
+
+def init_params(cfg: ArchConfig, rng) -> dict:
+    ks = jax.random.split(rng, 5)
+    dt = common.dtype_of(cfg)
+    return {
+        "frame_proj": common.dense_init(ks[0], cfg.d_model, cfg.d_model, dt),
+        "embed": common.embed_init(ks[1], cfg.vocab_size, cfg.d_model, dt),
+        "enc_layers": common.stacked_init(
+            ks[2], cfg.encoder_layers, lambda r: _enc_layer_init(r, cfg)),
+        "enc_norm": common.norm_init(cfg),
+        "layers": common.stacked_init(
+            ks[3], cfg.num_layers, lambda r: _dec_layer_init(r, cfg)),
+        "final_norm": common.norm_init(cfg),
+    }
+
+
+def encode(cfg: ArchConfig, params: dict, frames: jax.Array) -> jax.Array:
+    """frames: (B, T, D) precomputed frame embeddings (frontend stub)."""
+    x = common.dense(params["frame_proj"], frames)
+    x = x + common.sinusoid_pos(x.shape[1], cfg.d_model).astype(x.dtype)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(x, lp):
+        h = common.norm_apply(cfg, lp["norm1"], x)
+        x = x + attention.attn_apply(cfg, lp["attn"], h, positions=positions,
+                                     causal=False, use_rope=False)
+        h = common.norm_apply(cfg, lp["norm2"], x)
+        x = x + mlp.mlp_apply(cfg, lp["mlp"], h)
+        return sharding.constrain(x, "batch", "seq", None), ()
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return common.norm_apply(cfg, params["enc_norm"], x)
+
+
+def _dec_layer(cfg, lp, x, enc_out, positions, enc_positions):
+    h = common.norm_apply(cfg, lp["norm1"], x)
+    x = x + attention.attn_apply(cfg, lp["attn"], h, positions=positions,
+                                 causal=True, use_rope=False)
+    h = common.norm_apply(cfg, lp["norm2"], x)
+    x = x + attention.attn_apply(cfg, lp["xattn"], h, positions=positions,
+                                 causal=False, kv_x=enc_out,
+                                 kv_positions=enc_positions, use_rope=False)
+    h = common.norm_apply(cfg, lp["norm3"], x)
+    return x + mlp.mlp_apply(cfg, lp["mlp"], h)
+
+
+def forward(cfg: ArchConfig, params: dict, tokens: jax.Array,
+            frames: jax.Array, remat: bool = False):
+    """Teacher-forced training forward.  Returns (logits, aux)."""
+    enc_out = encode(cfg, params, frames)
+    x = params["embed"]["embedding"][tokens]
+    x = x + common.sinusoid_pos(x.shape[1], cfg.d_model).astype(x.dtype)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    enc_positions = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+
+    def body(x, lp):
+        fn = _dec_layer
+        if remat and cfg.remat != "none":
+            fn = jax.checkpoint(fn, static_argnums=(0,))
+        x = fn(cfg, lp, x, enc_out, positions, enc_positions)
+        return sharding.constrain(x, "batch", "seq", None), ()
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = common.norm_apply(cfg, params["final_norm"], x)
+    logits = x @ params["embed"]["embedding"].T
+    logits = sharding.constrain(logits.astype(jnp.float32),
+                                "batch", "seq", "vocab")
+    from repro.models.transformer import ZERO_AUX
+    return logits, ZERO_AUX
+
+
+def prefill(cfg: ArchConfig, params: dict, tokens: jax.Array,
+            frames: jax.Array, cache_len=None):
+    """Encode + teacher-forced decoder pass, returning decode caches.
+
+    Cross-attention K/V are computed once from the encoder output and stored
+    in the cache; self-attention caches hold the prompt tokens."""
+    enc_out = encode(cfg, params, frames)
+    x = params["embed"]["embedding"][tokens]
+    x = x + common.sinusoid_pos(x.shape[1], cfg.d_model).astype(x.dtype)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    enc_positions = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+    Kv, hd = cfg.num_kv_heads, cfg.hd
+
+    def body(x, lp):
+        h = common.norm_apply(cfg, lp["norm1"], x)
+        y, self_cache = attention.attn_apply(
+            cfg, lp["attn"], h, positions=positions, causal=True,
+            use_rope=False, return_cache=True, cache_len=cache_len)
+        x = x + y
+        h = common.norm_apply(cfg, lp["norm2"], x)
+        x = x + attention.attn_apply(cfg, lp["xattn"], h, positions=positions,
+                                     causal=False, kv_x=enc_out,
+                                     kv_positions=enc_positions, use_rope=False)
+        h = common.norm_apply(cfg, lp["norm3"], x)
+        x = x + mlp.mlp_apply(cfg, lp["mlp"], h)
+        xk = common.dense(lp["xattn"]["k"], enc_out)
+        xv = common.dense(lp["xattn"]["v"], enc_out)
+        cache = {"self": self_cache,
+                 "xk": xk.reshape(xk.shape[0], xk.shape[1], Kv, hd),
+                 "xv": xv.reshape(xv.shape[0], xv.shape[1], Kv, hd)}
+        return sharding.constrain(x, "batch", "seq", None), cache
+
+    x, caches = jax.lax.scan(body, x, params["layers"])
+    x = common.norm_apply(cfg, params["final_norm"], x[:, -1:])
+    logits = (x @ params["embed"]["embedding"].T).astype(jnp.float32)
+    return logits, caches
+
+
+def init_decode_caches(cfg: ArchConfig, batch: int, cache_len: int,
+                       enc_len: int):
+    Kv, hd = cfg.num_kv_heads, cfg.hd
+    dt = common.dtype_of(cfg)
+    one = {"self": attention.init_cache(cfg, batch, cache_len),
+           "xk": jnp.zeros((batch, enc_len, Kv, hd), dt),
+           "xv": jnp.zeros((batch, enc_len, Kv, hd), dt)}
+    L = cfg.num_layers
+    return jax.tree_util.tree_map(
+        lambda a: jnp.tile(a[None], (L,) + (1,) * a.ndim), one)
+
+
+def decode_step(cfg: ArchConfig, params: dict, tokens: jax.Array,
+                caches, index):
+    """tokens: (B, 1).  Cross-attn reads cached encoder K/V."""
+    x = params["embed"]["embedding"][tokens]
+    # absolute sinusoid at the (traced) decode index
+    D = cfg.d_model
+    inv = jnp.exp(-jnp.arange(0, D, 2, dtype=jnp.float32)
+                  * (np.log(10000.0) / max(D // 2 - 1, 1)))
+    ang = jnp.asarray(index, jnp.float32) * inv
+    x = x + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[:D].astype(x.dtype)
+    H, Kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+
+    def body(x, inp):
+        lp, cache = inp
+        h = common.norm_apply(cfg, lp["norm1"], x)
+        y, self_cache = attention.attn_decode(cfg, lp["attn"], h,
+                                              cache["self"], index=index,
+                                              use_rope=False)
+        x = x + y
+        h = common.norm_apply(cfg, lp["norm2"], x)
+        # cross-attention against cached encoder K/V
+        q = common.dense(lp["xattn"]["q"], h).reshape(x.shape[0], 1, Kv,
+                                                      H // Kv, hd)
+        scores = jnp.einsum("bqgrh,bsgh->bgrqs", q * (hd ** -0.5),
+                            cache["xk"], preferred_element_type=jnp.float32)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bgrqs,bsgh->bqgrh", probs.astype(x.dtype),
+                         cache["xv"]).reshape(x.shape[0], 1, H * hd)
+        x = x + common.dense(lp["xattn"]["o"], out)
+        h = common.norm_apply(cfg, lp["norm3"], x)
+        x = x + mlp.mlp_apply(cfg, lp["mlp"], h)
+        return x, {"self": self_cache, "xk": cache["xk"], "xv": cache["xv"]}
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+    x = common.norm_apply(cfg, params["final_norm"], x)
+    logits = (x @ params["embed"]["embedding"].T).astype(jnp.float32)
+    return logits, new_caches

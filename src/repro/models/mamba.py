@@ -1,0 +1,151 @@
+"""Mamba-1 selective-SSM block (Jamba's sequence mixer).
+
+The selective scan h_t = exp(dt_t*A) h_{t-1} + dt_t*B_t x_t is evaluated with
+a two-level schedule: ``lax.scan`` over fixed-size chunks carrying the (B,
+d_inner, d_state) state, with a parallel ``associative_scan`` inside each
+chunk.  This bounds the materialized state history to one chunk (the same
+blocking a TPU kernel would use for VMEM) while keeping HLO cost analysis
+trip-count-exact.  Decode is the O(1) single-step recurrence with a carried
+conv ring and SSM state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.parallel import sharding
+
+CHUNK = 256
+
+
+def _dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    dt_rank = max(1, int(np.ceil(cfg.d_model / 16)))
+    return d_inner, dt_rank, cfg.ssm_d_state
+
+
+def mamba_init(rng, cfg: ArchConfig) -> dict:
+    D = cfg.d_model
+    d_inner, dt_rank, d_state = _dims(cfg)
+    dt = common.dtype_of(cfg)
+    ks = jax.random.split(rng, 6)
+    A = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :],
+                 (d_inner, 1))
+    return {
+        "in_proj": common.dense_init(ks[0], D, 2 * d_inner, dt),
+        "conv": {"kernel": (jax.random.normal(ks[1], (cfg.ssm_conv_width, d_inner),
+                                              jnp.float32) * 0.1).astype(dt)},
+        "x_proj": common.dense_init(ks[2], d_inner, dt_rank + 2 * d_state, dt),
+        "dt_proj": common.dense_init(ks[3], dt_rank, d_inner, dt, use_bias=True),
+        "A_log": jnp.log(A),                      # fp32 (d_inner, d_state)
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": common.dense_init(ks[4], d_inner, D, dt),
+    }
+
+
+def _conv_causal(p: dict, x: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv via shifted adds.  x: (B, T, d_inner)."""
+    w = p["kernel"].astype(x.dtype)                       # (W, d_inner)
+    W = w.shape[0]
+    if state is None:
+        hist = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        hist = state.astype(x.dtype)
+    ext = jnp.concatenate([hist, x], axis=1)              # (B, T+W-1, d)
+    y = sum(ext[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    new_state = ext[:, -(W - 1):]
+    return y, new_state
+
+
+def _ssm_params(cfg, p, xc):
+    """xc: (B, T, d_inner) -> dt (B,T,d_inner), B_ (B,T,state), C_ (B,T,state)."""
+    _, dt_rank, d_state = _dims(cfg)
+    proj = common.dense(p["x_proj"], xc)
+    dt_in, B_, C_ = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt_full = common.dense(p["dt_proj"], dt_in).astype(jnp.float32)
+    dt_full = jax.nn.softplus(dt_full)                    # (B,T,d_inner)
+    return dt_full, B_.astype(jnp.float32), C_.astype(jnp.float32)
+
+
+def _scan_chunked(cfg, p, xc, h0=None):
+    """Two-level selective scan.  xc: (B, T, d_inner) -> (y (B,T,d_inner), h_T)."""
+    Bsz, T, d_inner = xc.shape
+    d_state = cfg.ssm_d_state
+    A = -jnp.exp(p["A_log"])                              # (d_inner, state) < 0
+    dt_full, B_, C_ = _ssm_params(cfg, p, xc)
+    # per-step decay / input:  a = exp(dt*A)  (B,T,d_inner,state)
+    chunk = min(CHUNK, T)
+    assert T % chunk == 0, (T, chunk)
+    n = T // chunk
+
+    def to_chunks(z):
+        return z.reshape(Bsz, n, chunk, *z.shape[2:]).swapaxes(0, 1)
+
+    xs = jax.tree_util.tree_map(to_chunks, (xc.astype(jnp.float32), dt_full, B_, C_))
+
+    def chunk_body(h0, inp):
+        xch, dtc, Bc, Cc = inp                            # (B,chunk,...)
+        loga = dtc[..., None] * A                         # (B,c,d_inner,state)
+        b = (dtc * xch)[..., None] * Bc[:, :, None, :]    # (B,c,d_inner,state)
+
+        def combine(l, r):
+            (la, lb), (ra, rb) = l, r
+            return la + ra, jnp.exp(ra) * lb + rb
+
+        cum_loga, hs = jax.lax.associative_scan(combine, (loga, b), axis=1)
+        hs = hs + jnp.exp(cum_loga) * h0[:, None]
+        y = jnp.einsum("bcds,bcs->bcd", hs, Cc)
+        return hs[:, -1], y
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, d_inner, d_state), jnp.float32)
+    h_T, ys = jax.lax.scan(chunk_body, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(Bsz, T, d_inner)
+    return (y + p["D"] * xc.astype(jnp.float32)).astype(xc.dtype), h_T
+
+
+def mamba_apply(cfg: ArchConfig, p: dict, x: jax.Array,
+                return_state: bool = False):
+    """x: (B, T, D) -> (B, T, D) [, final {'conv', 'ssm'} state]."""
+    d_inner, _, _ = _dims(cfg)
+    xz = common.dense(p["in_proj"], x)
+    xc, z = jnp.split(xz, 2, axis=-1)
+    xc = sharding.constrain(xc, "batch", "seq", "mlp")
+    xc, conv_state = _conv_causal(p["conv"], xc)
+    xc = jax.nn.silu(xc)
+    y, h_T = _scan_chunked(cfg, p, xc)
+    y = y * jax.nn.silu(z)
+    y = sharding.constrain(y, "batch", "seq", "mlp")
+    out = common.dense(p["out_proj"], y)
+    if return_state:
+        return out, {"conv": conv_state, "ssm": h_T}
+    return out
+
+
+def init_state(cfg: ArchConfig, batch: int) -> dict:
+    d_inner, _, d_state = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, d_inner),
+                          common.dtype_of(cfg)),
+        "ssm": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+    }
+
+
+def mamba_decode(cfg: ArchConfig, p: dict, x: jax.Array, state: dict):
+    """One-token step.  x: (B, 1, D)."""
+    A = -jnp.exp(p["A_log"])
+    xz = common.dense(p["in_proj"], x)
+    xc, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _conv_causal(p["conv"], xc, state["conv"])
+    xc = jax.nn.silu(xc)
+    dt_full, B_, C_ = _ssm_params(cfg, p, xc)
+    xf = xc.astype(jnp.float32)[:, 0]                     # (B, d_inner)
+    dt1, B1, C1 = dt_full[:, 0], B_[:, 0], C_[:, 0]
+    a = jnp.exp(dt1[..., None] * A)                       # (B,d_inner,state)
+    h = a * state["ssm"] + (dt1 * xf)[..., None] * B1[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, C1) + p["D"] * xf
+    y = (y[:, None].astype(x.dtype)) * jax.nn.silu(z)
+    return common.dense(p["out_proj"], y), {"conv": conv_state, "ssm": h}

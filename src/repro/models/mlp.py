@@ -1,0 +1,33 @@
+"""Dense FFN (SwiGLU / GELU / ReLU^2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.parallel import sharding
+
+
+def mlp_init(rng, cfg: ArchConfig, d_ff: int | None = None) -> dict:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    dt = common.dtype_of(cfg)
+    ks = jax.random.split(rng, 3)
+    p = {"wi": common.dense_init(ks[0], D, F, dt, cfg.use_bias),
+         "wo": common.dense_init(ks[1], F, D, dt, cfg.use_bias)}
+    if cfg.act == "swiglu":
+        p["wg"] = common.dense_init(ks[2], D, F, dt, cfg.use_bias)
+    return p
+
+
+def mlp_apply(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    h = common.dense(p["wi"], x)
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(common.dense(p["wg"], x)) * h
+    else:
+        h = common.act_fn(cfg.act)(h)
+    h = sharding.constrain(h, "batch", "seq", "mlp")
+    # SP: wo produces partial sums over 'model'; constraining the output to
+    # seq_sp turns the all-reduce into a reduce-scatter (half the wire bytes)
+    return sharding.constrain(common.dense(p["wo"], h),
+                              "batch", "seq_sp", None)

@@ -1,0 +1,105 @@
+"""Top-k MoE FFN with grouped dense dispatch (expert-parallel over 'model').
+
+Tokens are reshaped into groups aligned with the data-parallel sharding; the
+dispatch/combine tensors are (G, Ng, E, C) one-hots so every shape is static
+(capacity-factor token dropping).  Constraining the dispatched activations to
+(batch, expert, ...) makes GSPMD place each expert's FFN on its 'model' shard
+— the EP exchange shows up as all-to-all / collective-permute in the HLO.
+
+Aux losses (load-balance + router z-loss) are returned for the train step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common, mlp
+from repro.parallel import sharding
+
+
+def moe_init(rng, cfg: ArchConfig) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    dt = common.dtype_of(cfg)
+    ks = jax.random.split(rng, 5)
+
+    def expert_kernels(rng, in_dim, out_dim):
+        scale = 1.0 / jnp.sqrt(jnp.float32(in_dim))
+        return {"kernel": (jax.random.normal(rng, (E, in_dim, out_dim),
+                                             jnp.float32) * scale).astype(dt)}
+
+    p = {
+        "router": common.dense_init(ks[0], D, E, jnp.float32),
+        "wi": expert_kernels(ks[1], D, F),
+        "wo": expert_kernels(ks[2], F, D),
+    }
+    if cfg.act == "swiglu":
+        p["wg"] = expert_kernels(ks[3], D, F)
+    if cfg.shared_experts:
+        p["shared_mlp"] = mlp.mlp_init(ks[4], cfg,
+                                       d_ff=cfg.d_ff * cfg.shared_experts)
+    return p
+
+
+def _group_size(n_tokens_per_shard: int) -> int:
+    g = 1
+    while g < 1024 and n_tokens_per_shard % (g * 2) == 0:
+        g *= 2
+    return g
+
+
+def moe_apply(cfg: ArchConfig, p: dict, x: jax.Array):
+    """x: (B, S, D) -> (y, aux) with aux = {'lb_loss', 'z_loss'}."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    N = B * S
+    ctx = sharding.get_ctx()
+    dp = ctx.axis_size("batch") if ctx else 1
+    dp = max(dp, 1)
+    Ng = _group_size(max(N // dp, 1))
+    G = N // Ng
+    C = max(1, int(Ng * K / E * cfg.capacity_factor))
+
+    xg = x.reshape(G, Ng, D)
+    xg = sharding.constrain(xg, "batch", None, None)
+
+    logits = (xg @ p["router"]["kernel"].astype(jnp.float32))       # (G,Ng,E) fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, K)                            # (G,Ng,K)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    # slot assignment: order tokens within a group, count per expert
+    emask = jax.nn.one_hot(idx, E, dtype=jnp.int32)                 # (G,Ng,K,E)
+    flat = emask.reshape(G, Ng * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                           # slots before me
+    pos = pos.reshape(G, Ng, K, E)
+    slot = jnp.sum(pos * emask, -1)                                 # (G,Ng,K)
+    slot_oh = jax.nn.one_hot(slot, C, dtype=x.dtype)                # >=C -> all-zero row
+
+    # dispatch/combine: (G, Ng, E, C)
+    disp = jnp.einsum("gnke,gnkc->gnec", emask.astype(x.dtype), slot_oh)
+    comb = jnp.einsum("gnke,gnkc,gnk->gnec", emask.astype(jnp.float32),
+                      slot_oh.astype(jnp.float32), gates).astype(x.dtype)
+
+    xe = jnp.einsum("gnec,gnd->gecd", disp, xg)                     # (G,E,C,D)
+    xe = sharding.constrain(xe, "batch", "expert", None, None)
+    h = jnp.einsum("gecd,edf->gecf", xe, p["wi"]["kernel"])
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["wg"]["kernel"])) * h
+    else:
+        h = common.act_fn(cfg.act)(h)
+    h = sharding.constrain(h, "batch", "expert", None, None)
+    out = jnp.einsum("gecf,efd->gecd", h, p["wo"]["kernel"])
+    out = sharding.constrain(out, "batch", "expert", None, None)
+    y = jnp.einsum("gecd,gnec->gnd", out, comb.astype(out.dtype))
+    y = y.reshape(B, S, D)
+
+    if "shared_mlp" in p:
+        y = y + mlp.mlp_apply(cfg, p["shared_mlp"], x)
+
+    # aux losses (fp32)
+    density = jnp.mean(emask.astype(jnp.float32).sum(2), axis=(0, 1))   # (E,)
+    router_mean = jnp.mean(probs, axis=(0, 1))
+    lb_loss = E * jnp.sum(density / K * router_mean)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return y, {"lb_loss": lb_loss, "z_loss": z_loss}

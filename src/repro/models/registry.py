@@ -1,0 +1,107 @@
+"""Family dispatch: one uniform API over all assigned architectures.
+
+  init_params(cfg, rng)              -> param pytree (use jax.eval_shape for dry-run)
+  forward(cfg, params, batch, remat) -> (logits, aux)     [train]
+  prefill(cfg, params, batch)        -> (last_logits, caches)
+  decode_step(cfg, params, batch, caches) -> (logits, caches)
+  init_decode_caches(cfg, batch_size, cache_len, shape)
+  input_specs(cfg, shape)            -> dict[str, ShapeDtypeStruct]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec, transformer, vlm
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def init_params(cfg: ArchConfig, rng):
+    if cfg.family == "encdec":
+        return encdec.init_params(cfg, rng)
+    if cfg.family == "vlm":
+        return vlm.init_params(cfg, rng)
+    return transformer.init_params(cfg, rng)
+
+
+def abstract_params(cfg: ArchConfig):
+    """Parameter ShapeDtypeStructs without allocating anything."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+def text_len(cfg: ArchConfig, shape: ShapeConfig) -> int:
+    return shape.seq_len - cfg.num_patches if cfg.family == "vlm" else shape.seq_len
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            return {"frames": _sds((B, S, cfg.d_model), dt),
+                    "tokens": _sds((B, S), jnp.int32),
+                    "labels": _sds((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            St = text_len(cfg, shape)
+            return {"patches": _sds((B, cfg.num_patches, cfg.d_model), dt),
+                    "tokens": _sds((B, St), jnp.int32),
+                    "labels": _sds((B, St), jnp.int32)}
+        return {"tokens": _sds((B, S), jnp.int32),
+                "labels": _sds((B, S), jnp.int32)}
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return {"frames": _sds((B, S, cfg.d_model), dt),
+                    "tokens": _sds((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            return {"patches": _sds((B, cfg.num_patches, cfg.d_model), dt),
+                    "tokens": _sds((B, text_len(cfg, shape)), jnp.int32)}
+        return {"tokens": _sds((B, S), jnp.int32)}
+    # decode: one new token against a cache of length S
+    spec = {"tokens": _sds((B, 1), jnp.int32),
+            "index": _sds((), jnp.int32)}
+    return spec
+
+
+def forward(cfg: ArchConfig, params, batch: dict, remat: bool = False):
+    if cfg.family == "encdec":
+        return encdec.forward(cfg, params, batch["tokens"], batch["frames"],
+                              remat=remat)
+    if cfg.family == "vlm":
+        return vlm.forward(cfg, params, batch["tokens"], batch["patches"],
+                           remat=remat)
+    return transformer.forward(cfg, params, batch["tokens"], remat=remat)
+
+
+def prefill(cfg: ArchConfig, params, batch: dict, cache_len=None):
+    if cfg.family == "encdec":
+        return encdec.prefill(cfg, params, batch["tokens"], batch["frames"],
+                              cache_len=cache_len)
+    if cfg.family == "vlm":
+        return vlm.prefill(cfg, params, batch["tokens"], batch["patches"],
+                           cache_len=cache_len)
+    return transformer.prefill(cfg, params, batch["tokens"],
+                               cache_len=cache_len)
+
+
+def decode_step(cfg: ArchConfig, params, batch: dict, caches):
+    if cfg.family == "encdec":
+        return encdec.decode_step(cfg, params, batch["tokens"], caches,
+                                  batch["index"])
+    return transformer.decode_step(cfg, params, batch["tokens"], caches,
+                                   batch["index"])
+
+
+def init_decode_caches(cfg: ArchConfig, batch_size: int, cache_len: int):
+    if cfg.family == "encdec":
+        return encdec.init_decode_caches(cfg, batch_size, cache_len,
+                                         enc_len=cache_len)
+    return transformer.init_decode_caches(cfg, batch_size, cache_len)
+
+
+def abstract_decode_caches(cfg: ArchConfig, batch_size: int, cache_len: int):
+    return jax.eval_shape(
+        lambda: init_decode_caches(cfg, batch_size, cache_len))

@@ -1,0 +1,270 @@
+"""Decoder-only LM assembly: dense / MoE / hybrid (Jamba) / SSM (RWKV-6).
+
+Layers are stacked into groups of ``cfg.layer_group`` and scanned with
+``lax.scan`` (stacked params, optional remat on the group body), so compile
+time and HLO size are O(one group), while XLA cost analysis stays
+trip-count-exact.  Heterogeneous interleaves (Jamba: 7 Mamba + 1 attention
+per group, MoE every 2nd layer) are unrolled *within* the group, which is
+what makes the group homogeneous across the scan.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention, common, mamba, mlp, moe, rwkv6
+from repro.parallel import sharding
+
+ZERO_AUX = {"lb_loss": jnp.float32(0.0), "z_loss": jnp.float32(0.0)}
+
+
+# ---------------------------------------------------------------------------
+# layer init
+# ---------------------------------------------------------------------------
+
+def _layer_init(rng, cfg: ArchConfig, l: int) -> dict:
+    """One layer's params; ``l`` is the position within a group."""
+    ks = jax.random.split(rng, 4)
+    p: dict = {"norm1": common.norm_init(cfg)}
+    if cfg.family == "ssm":
+        p["rwkv"] = rwkv6.time_mix_init(ks[0], cfg)
+        p["norm2"] = common.norm_init(cfg)
+        p["cmlp"] = rwkv6.channel_mix_init(ks[1], cfg)
+        return p
+    if cfg.is_attn_layer(l):
+        p["attn"] = attention.attn_init(ks[0], cfg)
+    else:
+        p["mamba"] = mamba.mamba_init(ks[0], cfg)
+    if not cfg.parallel_block:
+        p["norm2"] = common.norm_init(cfg)
+    if cfg.is_moe_layer(l):
+        p["moe"] = moe.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = mlp.mlp_init(ks[1], cfg)
+    return p
+
+
+def _group_init(rng, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(rng, cfg.layer_group)
+    return {f"l{i}": _layer_init(ks[i], cfg, i) for i in range(cfg.layer_group)}
+
+
+def init_params(cfg: ArchConfig, rng) -> dict:
+    ks = jax.random.split(rng, 4)
+    dt = common.dtype_of(cfg)
+    p = {
+        "embed": common.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "layers": common.stacked_init(ks[1], cfg.num_groups(),
+                                      lambda r: _group_init(r, cfg)),
+        "final_norm": common.norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = common.dense_init(ks[2], cfg.d_model, cfg.vocab_size, dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# layer apply (full-sequence and decode variants)
+# ---------------------------------------------------------------------------
+
+def _layer_apply(cfg: ArchConfig, p: dict, l: int, x, positions, *,
+                 cache_len=None):
+    """Full-sequence layer.  Returns (x, aux, cache_or_None)."""
+    aux = ZERO_AUX
+    cache = None
+    make_cache = cache_len is not None
+    h = common.norm_apply(cfg, p["norm1"], x)
+    if cfg.family == "ssm":
+        y, st = rwkv6.time_mix_apply(cfg, p["rwkv"], h)
+        x = sharding.constrain(x + y, "batch", "seq_sp", None)
+        h2 = common.norm_apply(cfg, p["norm2"], x)
+        y2, st2 = rwkv6.channel_mix_apply(cfg, p["cmlp"], h2)
+        x = sharding.constrain(x + y2, "batch", "seq_sp", None)
+        if make_cache:
+            cache = {"tm": st, "cm": st2}
+        return x, aux, cache
+    if "attn" in p:
+        window = cfg.sliding_window
+        if make_cache:
+            y, cache = attention.attn_apply(
+                cfg, p["attn"], h, positions=positions, causal=True,
+                window=window, return_cache=True, cache_len=cache_len)
+        else:
+            y = attention.attn_apply(cfg, p["attn"], h, positions=positions,
+                                     causal=True, window=window)
+    else:
+        if make_cache:
+            y, cache = mamba.mamba_apply(cfg, p["mamba"], h, return_state=True)
+        else:
+            y = mamba.mamba_apply(cfg, p["mamba"], h)
+    if cfg.parallel_block:
+        f, aux = _ffn(cfg, p, h)
+        return sharding.constrain(x + y + f, "batch", "seq_sp", None), \
+            aux, cache
+    x = sharding.constrain(x + y, "batch", "seq_sp", None)
+    h2 = common.norm_apply(cfg, p["norm2"], x)
+    f, aux = _ffn(cfg, p, h2)
+    return sharding.constrain(x + f, "batch", "seq_sp", None), aux, cache
+
+
+def _ffn(cfg, p, h):
+    if "moe" in p:
+        y, aux = moe.moe_apply(cfg, p["moe"], h)
+        return y, aux
+    return mlp.mlp_apply(cfg, p["mlp"], h), ZERO_AUX
+
+
+def _layer_decode(cfg: ArchConfig, p: dict, l: int, x, cache: dict, index):
+    """One-token layer step.  Returns (x, new_cache)."""
+    h = common.norm_apply(cfg, p["norm1"], x)
+    if cfg.family == "ssm":
+        y, st = rwkv6.time_mix_apply(cfg, p["rwkv"], h, state=cache["tm"])
+        x = x + y
+        h2 = common.norm_apply(cfg, p["norm2"], x)
+        y2, st2 = rwkv6.channel_mix_apply(cfg, p["cmlp"], h2, state=cache["cm"])
+        return x + y2, {"tm": st, "cm": st2}
+    if "attn" in p:
+        y, new_cache = attention.attn_decode(cfg, p["attn"], h, cache,
+                                             index=index,
+                                             window=cfg.sliding_window)
+    else:
+        y, new_cache = mamba.mamba_decode(cfg, p["mamba"], h, cache)
+    if cfg.parallel_block:
+        f, _ = _ffn(cfg, p, h)
+        return x + y + f, new_cache
+    x = x + y
+    h2 = common.norm_apply(cfg, p["norm2"], x)
+    f, _ = _ffn(cfg, p, h2)
+    return x + f, new_cache
+
+
+# ---------------------------------------------------------------------------
+# backbone: scan over groups
+# ---------------------------------------------------------------------------
+
+def _group_apply(cfg, gp, x, positions, cache_len=None):
+    auxes = ZERO_AUX
+    caches = {}
+    for i in range(cfg.layer_group):
+        x, aux, cache = _layer_apply(cfg, gp[f"l{i}"], i, x, positions,
+                                     cache_len=cache_len)
+        auxes = jax.tree_util.tree_map(lambda a, b: a + b, auxes, aux)
+        if cache_len is not None:
+            caches[f"l{i}"] = cache
+    return x, auxes, caches
+
+
+def apply_backbone(cfg: ArchConfig, layers, x, positions, *,
+                   remat: bool = False, cache_len=None):
+    """x: (B, S, D) embeddings.  Returns (x, aux[, caches])."""
+
+    def body(carry, gp):
+        x, auxes = carry
+        x = sharding.constrain(x, "batch", "seq_sp", None)
+        if remat and cfg.remat != "none":
+            pol = (None if cfg.remat == "full"
+                   else jax.checkpoint_policies.dots_saveable)
+            fn = jax.checkpoint(
+                lambda gp, x: _group_apply(cfg, gp, x, positions)[:2],
+                policy=pol)
+            x, aux = fn(gp, x)
+            caches = {}
+        else:
+            x, aux, caches = _group_apply(cfg, gp, x, positions,
+                                          cache_len=cache_len)
+        auxes = jax.tree_util.tree_map(lambda a, b: a + b, auxes, aux)
+        return (x, auxes), caches
+
+    (x, auxes), caches = jax.lax.scan(body, (x, ZERO_AUX), layers)
+    if cache_len is not None:
+        return x, auxes, caches
+    return x, auxes
+
+
+def backbone_decode(cfg: ArchConfig, layers, x, caches, index):
+    """One-token step through all groups.  caches: stacked over groups."""
+
+    def body(x, inp):
+        gp, cache_g = inp
+        new = {}
+        for i in range(cfg.layer_group):
+            x, new[f"l{i}"] = _layer_decode(cfg, gp[f"l{i}"], i, x,
+                                            cache_g[f"l{i}"], index)
+        return x, new
+
+    x, new_caches = jax.lax.scan(body, x, (layers, caches))
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# public LM API
+# ---------------------------------------------------------------------------
+
+def _logits(cfg, params, x):
+    if cfg.tie_embeddings:
+        y = x @ params["embed"]["embedding"].T
+    else:
+        y = common.dense(params["lm_head"], x)
+    return sharding.constrain(y.astype(jnp.float32), "batch", "seq", "vocab")
+
+
+def forward(cfg: ArchConfig, params: dict, tokens: jax.Array, *,
+            remat: bool = False, extra_embeds: Optional[jax.Array] = None):
+    """tokens: (B, S) -> logits (B, S[, +P], V) fp32, aux dict."""
+    x = params["embed"]["embedding"][tokens]
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    x = sharding.constrain(x, "batch", "seq_sp", None)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, aux = apply_backbone(cfg, params["layers"], x, positions, remat=remat)
+    x = common.norm_apply(cfg, params["final_norm"], x)
+    return _logits(cfg, params, x), aux
+
+
+def init_decode_caches(cfg: ArchConfig, batch: int, cache_len: int):
+    """Stacked (over groups) decode caches for every layer position."""
+    def one_layer(l):
+        if cfg.family == "ssm":
+            H, dh = rwkv6._dims(cfg)
+            return {
+                "tm": {"shift": jnp.zeros((batch, 1, cfg.d_model),
+                                          common.dtype_of(cfg)),
+                       "wkv": jnp.zeros((batch, H, dh, dh), jnp.float32)},
+                "cm": jnp.zeros((batch, 1, cfg.d_model), common.dtype_of(cfg)),
+            }
+        if cfg.is_attn_layer(l):
+            ln = cfg.sliding_window or cache_len   # SWA: full ring always
+            return attention.init_cache(cfg, batch, ln)
+        return mamba.init_state(cfg, batch)
+
+    group = {f"l{i}": one_layer(i) for i in range(cfg.layer_group)}
+    G = cfg.num_groups()
+    return jax.tree_util.tree_map(
+        lambda a: jnp.tile(a[None], (G,) + (1,) * a.ndim), group)
+
+
+def prefill(cfg: ArchConfig, params: dict, tokens: jax.Array,
+            extra_embeds: Optional[jax.Array] = None,
+            cache_len: Optional[int] = None):
+    """Full forward that also returns decode caches sized ``cache_len``."""
+    x = params["embed"]["embedding"][tokens]
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    x = sharding.constrain(x, "batch", "seq", None)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, aux, caches = apply_backbone(cfg, params["layers"], x, positions,
+                                    cache_len=cache_len or x.shape[1])
+    x = common.norm_apply(cfg, params["final_norm"], x)
+    return _logits(cfg, params, x[:, -1:]), caches
+
+
+def decode_step(cfg: ArchConfig, params: dict, tokens: jax.Array,
+                caches, index):
+    """tokens: (B, 1); index: scalar position.  Returns (logits, caches)."""
+    x = params["embed"]["embedding"][tokens]
+    x, new_caches = backbone_decode(cfg, params["layers"], x, caches, index)
+    x = common.norm_apply(cfg, params["final_norm"], x)
+    return _logits(cfg, params, x), new_caches

@@ -1,0 +1,44 @@
+"""InternVL-style VLM: stub vision frontend + decoder-only LM backbone.
+
+The ViT is a STUB per the assignment: ``input_specs`` provides precomputed
+patch embeddings (B, P, vit_dim=d_model) which are projected (``vit_proj``,
+the MLP connector) and prepended to the text token embeddings.  Everything
+downstream is the standard transformer backbone.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common, transformer
+
+
+def init_params(cfg: ArchConfig, rng) -> dict:
+    ks = jax.random.split(rng, 2)
+    p = transformer.init_params(cfg, ks[0])
+    p["vit_proj"] = common.dense_init(ks[1], cfg.d_model, cfg.d_model,
+                                      common.dtype_of(cfg))
+    return p
+
+
+def forward(cfg: ArchConfig, params: dict, tokens: jax.Array,
+            patches: jax.Array, remat: bool = False):
+    """tokens: (B, S_text); patches: (B, P, D) precomputed patch embeddings.
+
+    Returns logits over the FULL (P + S_text) sequence and aux losses; the
+    train step only applies loss on the text positions."""
+    img = common.dense(params["vit_proj"], patches)
+    return transformer.forward(cfg, params, tokens, remat=remat,
+                               extra_embeds=img)
+
+
+def prefill(cfg: ArchConfig, params: dict, tokens: jax.Array,
+            patches: jax.Array, cache_len=None):
+    img = common.dense(params["vit_proj"], patches)
+    return transformer.prefill(cfg, params, tokens, extra_embeds=img,
+                               cache_len=cache_len)
+
+
+decode_step = transformer.decode_step
+init_decode_caches = transformer.init_decode_caches

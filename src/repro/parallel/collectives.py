@@ -1,0 +1,211 @@
+"""Hand-scheduled collectives with in-path transforms.
+
+This is the paper's "embedded function mode" mapped to TPU: instead of
+offloading packet transforms to a SmartNIC in the network path, we fuse
+transforms (int8 quantization with error feedback) into the gradient
+all-reduce that crosses the slow ('pod' / DCN-like) axis.
+
+Two implementations are provided, mirroring the paper's kernel-stack vs
+user-space-stack (DPDK) comparison:
+
+  * ``compressed_psum``  — all_to_all + local reduce + all_gather, int8 wire
+    format (~4x less DCN traffic than fp32, ~2x less than bf16).
+  * ``ring_allreduce``   — explicit ppermute ring reduce-scatter/all-gather
+    with an optional per-hop wire dtype; the fully hand-scheduled path.
+
+All functions run inside ``shard_map`` with the target axis manual.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# int8 (de)quantization — the in-path transform
+# ---------------------------------------------------------------------------
+
+def quantize_int8(x: jax.Array, axis: int = -1):
+    """Symmetric per-slice int8 quantization.  Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# compressed all-reduce (all_to_all formulation)
+# ---------------------------------------------------------------------------
+
+def _to_chunks(x: jax.Array, n: int):
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.size) % n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(n, -1), pad
+
+
+def compressed_psum(x: jax.Array, axis_name: str, mean: bool = True):
+    """int8-wire all-reduce over ``axis_name``.
+
+    Returns (reduced, residual) where ``residual = x - dequant(quant(x))``
+    is this device's local quantization error for error feedback.
+    """
+    n = jax.lax.axis_size(axis_name)
+    chunks, pad = _to_chunks(x, n)                       # (n, c)
+    q, s = quantize_int8(chunks)                         # int8 (n,c), (n,1)
+    residual = (chunks - dequantize_int8(q, s)).reshape(-1)
+    residual = residual[:residual.size - pad] if pad else residual
+    residual = residual.reshape(x.shape).astype(x.dtype)
+
+    # exchange: device i receives chunk i from every pod
+    q = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0,
+                           tiled=True)                   # (n, c)
+    s = jax.lax.all_to_all(s, axis_name, split_axis=0, concat_axis=0,
+                           tiled=True)                   # (n, 1)
+    partial = jnp.sum(dequantize_int8(q, s), axis=0)     # (c,)
+    if mean:
+        partial = partial / n
+    q2, s2 = quantize_int8(partial[None])                # (1,c)
+    q2 = jax.lax.all_gather(q2[0], axis_name)            # (n, c)
+    s2 = jax.lax.all_gather(s2[0], axis_name)            # (n, 1)
+    out = dequantize_int8(q2, s2).reshape(-1)
+    if pad:
+        out = out[:out.size - pad]
+    return out.reshape(x.shape).astype(x.dtype), residual
+
+
+# ---------------------------------------------------------------------------
+# shape-preserving pairwise int8 exchange (small pod counts)
+# ---------------------------------------------------------------------------
+
+def pairwise_int8_allreduce(x: jax.Array, axis_name: str, mean: bool = True):
+    """int8 ring broadcast-accumulate WITHOUT reshaping the payload.
+
+    The a2a/ring formulations flatten to (n, c) chunks — inside a shard_map
+    that is manual only over 'pod', that reshape crosses the auto-sharded
+    dims and GSPMD must all-gather the whole gradient first (measured 6x
+    regression on jamba-398B).  Here the tensor keeps its (sharded) shape:
+    each pod ppermutes its int8 copy around the ring and accumulates.
+
+    Wire: (n-1) x 1 B/elem vs stock bf16 all-reduce 2(n-1)/n x 2 B/elem —
+    a 2x DCN saving at n=2 pods (the production mesh); prefer the chunked
+    forms only when n is large AND the payload is pod-manual."""
+    n = jax.lax.axis_size(axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    xf = x.astype(jnp.float32)
+    q, s = quantize_int8(xf)                      # rowwise scales, same shape
+    residual = (xf - dequantize_int8(q, s)).astype(x.dtype)
+    acc = dequantize_int8(q, s)
+    for _ in range(n - 1):
+        q = jax.lax.ppermute(q, axis_name, perm)
+        s = jax.lax.ppermute(s, axis_name, perm)
+        acc = acc + dequantize_int8(q, s)
+    if mean:
+        acc = acc / n
+    return acc.astype(x.dtype), residual
+
+
+# ---------------------------------------------------------------------------
+# explicit ring all-reduce (ppermute formulation)
+# ---------------------------------------------------------------------------
+
+def _take(chunks: jax.Array, idx: jax.Array) -> jax.Array:
+    return jax.lax.dynamic_slice_in_dim(chunks, idx, 1, axis=0)[0]
+
+
+def ring_allreduce(x: jax.Array, axis_name: str, mean: bool = True,
+                   wire_int8: bool = False):
+    """Ring reduce-scatter + all-gather via collective_permute.
+
+    With ``wire_int8`` every hop carries int8 payloads (per-hop requantize) —
+    the deepest in-path-transform variant.  Returns (reduced, residual).
+    """
+    n = jax.lax.axis_size(axis_name)
+    me = jax.lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    chunks, pad = _to_chunks(x, n)                       # (n, c)
+
+    residual = jnp.zeros_like(x, dtype=x.dtype)
+    if wire_int8:
+        q, s = quantize_int8(chunks)
+        res = (chunks - dequantize_int8(q, s)).reshape(-1)
+        res = res[:res.size - pad] if pad else res
+        residual = res.reshape(x.shape).astype(x.dtype)
+        chunks = dequantize_int8(q, s)
+
+    def hop(z):
+        if not wire_int8:
+            return jax.lax.ppermute(z, axis_name, perm)
+        qz, sz = quantize_int8(z[None])
+        qz = jax.lax.ppermute(qz[0], axis_name, perm)
+        sz = jax.lax.ppermute(sz[0], axis_name, perm)
+        return dequantize_int8(qz[None], sz)[0]
+
+    # reduce-scatter: after n-1 hops, device i owns chunk (i+1) % n
+    acc = _take(chunks, me)
+    for t in range(n - 1):
+        acc = hop(acc)
+        acc = acc + _take(chunks, (me - 1 - t) % n)
+    if mean:
+        acc = acc / n
+    # all-gather of owned chunks, rotated back into order
+    ag = jax.lax.all_gather(acc, axis_name)              # row j = chunk (j+1)%n
+    out = jnp.roll(ag, 1, axis=0).reshape(-1)
+    if pad:
+        out = out[:out.size - pad]
+    return out.reshape(x.shape).astype(x.dtype), residual
+
+
+# ---------------------------------------------------------------------------
+# gradient-tree reduction with error feedback
+# ---------------------------------------------------------------------------
+
+MIN_COMPRESS_SIZE = 4096  # leaves smaller than this reduce at full precision
+
+
+def reduce_gradients(grads, axis_name: str, method: str = "stock",
+                     errors=None):
+    """Cross-'pod' gradient reduction.  method: stock | int8_a2a | int8_ring.
+
+    ``errors`` is the error-feedback tree (or None); returns (grads, errors).
+    """
+    if method == "stock":
+        return jax.tree_util.tree_map(
+            lambda g: jax.lax.pmean(g, axis_name), grads), errors
+
+    if errors is None:
+        errors = jax.tree_util.tree_map(jnp.zeros_like, grads)
+
+    def reduce_leaf(g, e):
+        if g.size < MIN_COMPRESS_SIZE:
+            return jax.lax.pmean(g, axis_name), jnp.zeros_like(e)
+        gin = g + e.astype(g.dtype)
+        if method == "int8_a2a":
+            out, res = compressed_psum(gin, axis_name)
+        elif method == "int8_pairwise":
+            out, res = pairwise_int8_allreduce(gin, axis_name)
+        elif method == "int8_ring":
+            out, res = ring_allreduce(gin, axis_name, wire_int8=True)
+        elif method == "ring":
+            out, res = ring_allreduce(gin, axis_name)
+        else:
+            raise ValueError(method)
+        return out, res
+
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    eflat = jax.tree_util.tree_leaves(errors)
+    outs, ress = [], []
+    for g, e in zip(flat, eflat):
+        o, r = reduce_leaf(g, e)
+        outs.append(o)
+        ress.append(r)
+    return (jax.tree_util.tree_unflatten(treedef, outs),
+            jax.tree_util.tree_unflatten(treedef, ress))

@@ -1,0 +1,35 @@
+"""Runtime policy: which implementation backs each hot-spot op.
+
+The dry-run / production-XLA path uses pure-jnp ("xla") implementations; on
+real TPUs the Pallas kernels are enabled; CPU tests run Pallas in interpret
+mode.  The offload planner (core/planner.py) can also flip these switches.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+_DEFAULT = {
+    "attention_impl": "xla",    # xla | pallas
+    "rwkv_impl": "xla",         # xla | pallas
+    "quant_impl": "xla",        # xla | pallas
+    "pallas_interpret": True,   # interpret=True on CPU; False on real TPU
+}
+
+_local = threading.local()
+
+
+def policy() -> dict:
+    if not hasattr(_local, "policy"):
+        _local.policy = dict(_DEFAULT)
+    return _local.policy
+
+
+@contextmanager
+def use_policy(**kwargs):
+    prev = dict(policy())
+    policy().update(kwargs)
+    try:
+        yield policy()
+    finally:
+        _local.policy = prev

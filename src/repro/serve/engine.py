@@ -1,0 +1,75 @@
+"""Batched serving engine: prefill queue + synchronous decode batch.
+
+A deliberately compact production shape: requests accumulate in a queue,
+prefill runs per-request (padded to the bucket), decode advances the whole
+batch one token per call.  Greedy sampling (argmax) keeps tests
+deterministic; temperature sampling is a one-liner swap.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import registry
+from repro.serve import step as sstep
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int = 16
+    generated: list = field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, mesh, batch_size: int,
+                 cache_len: int, params):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.batch = batch_size
+        self.cache_len = cache_len
+        self.params = params
+        shape = ShapeConfig("serve", "decode", cache_len, batch_size)
+        self._decode, self.ctx = sstep.make_decode_step(cfg, shape, mesh)
+        self._decode = jax.jit(self._decode, donate_argnums=1)
+        pshape = ShapeConfig("serve", "prefill", cache_len, batch_size)
+        self._prefill, _ = sstep.make_prefill_step(cfg, pshape, mesh,
+                                                   cache_len=cache_len)
+        self._prefill = jax.jit(self._prefill,
+                                static_argnames=())
+
+    def generate(self, requests: list[Request]) -> list[Request]:
+        """Run a full batch of requests to completion (greedy)."""
+        assert len(requests) <= self.batch
+        reqs = list(requests)
+        while len(reqs) < self.batch:  # pad batch with dummies
+            reqs.append(Request(prompt=reqs[0].prompt, max_new_tokens=0))
+        plen = max(len(r.prompt) for r in reqs)
+        prompts = np.stack([np.pad(r.prompt, (plen - len(r.prompt), 0))
+                            for r in reqs])  # left-pad
+        logits, caches = self._prefill(self.params,
+                                       {"tokens": jnp.asarray(prompts)})
+        tok = jnp.argmax(logits[:, -1], axis=-1)
+        index = plen
+        max_new = max(r.max_new_tokens for r in reqs)
+        for i in range(max_new):
+            for b, r in enumerate(reqs):
+                if not r.done and len(r.generated) < r.max_new_tokens:
+                    r.generated.append(int(tok[b]))
+                    if len(r.generated) >= r.max_new_tokens:
+                        r.done = True
+            if all(r.done or r.max_new_tokens == 0 for r in reqs):
+                break
+            logits, caches = self._decode(
+                self.params, caches,
+                {"tokens": tok[:, None].astype(jnp.int32),
+                 "index": jnp.int32(index)})
+            tok = jnp.argmax(logits[:, -1], axis=-1)
+            index += 1
+        return requests

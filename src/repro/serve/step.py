@@ -1,0 +1,99 @@
+"""Serving steps: prefill and single-token decode, fully sharded.
+
+decode cells: the KV cache is sequence-split over 'model' (flash-decode
+style) for normal batched decode, and over every mesh axis for the
+batch=1 long_500k cell (see parallel/sharding.decode_rules).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import registry
+from repro.parallel import sharding
+
+
+def _ctx_for(mesh, shape: ShapeConfig):
+    multi_pod = "pod" in mesh.axis_names
+    long_ctx = shape.kind == "decode" and shape.global_batch == 1
+    if shape.kind == "decode":
+        rules = sharding.decode_rules(multi_pod, long_ctx)
+    else:
+        rules = sharding.train_rules(multi_pod)
+    return sharding.ShardingCtx(mesh, rules)
+
+
+def make_prefill_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                      cache_len=None):
+    ctx = _ctx_for(mesh, shape)
+
+    def step(params, batch):
+        with sharding.use_ctx(ctx):
+            return registry.prefill(cfg, params, batch, cache_len=cache_len)
+    return step, ctx
+
+
+def make_decode_step(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    ctx = _ctx_for(mesh, shape)
+
+    def step(params, caches, batch):
+        with sharding.use_ctx(ctx):
+            logits, caches = registry.decode_step(cfg, params, batch, caches)
+            return logits, caches
+    return step, ctx
+
+
+_CACHE_RULES = [
+    # (key suffix, logical axes per dim, after the leading group dim)
+    (("k", "v", "xk", "xv"), ("batch", "cache_seq", None, None)),
+    (("conv",),              ("batch", None, "mlp")),
+    (("ssm",),               ("batch", "mlp", None)),
+    (("wkv",),               ("batch", "heads", None, None)),
+    (("shift", "cm"),        ("batch", None, None)),
+]
+
+
+def cache_shardings(cache_shape, ctx: sharding.ShardingCtx):
+    """Shardings for a decode-cache pytree (kv caches, ssm/rwkv states)."""
+    def spec(path, leaf):
+        key = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        for keys, logical in _CACHE_RULES:
+            if key in keys and len(leaf.shape) == len(logical) + 1:
+                return sharding.safe_spec(leaf.shape, (None,) + logical, ctx)
+        return P()
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(ctx.mesh, spec(path, leaf)),
+        cache_shape)
+
+
+def jit_decode_step(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    """jit with explicit shardings for dry-run lowering."""
+    step, ctx = make_decode_step(cfg, shape, mesh)
+    params_shape = registry.abstract_params(cfg)
+    pspec = sharding.param_shardings(params_shape, ctx)
+    cache_shape = registry.abstract_decode_caches(
+        cfg, shape.global_batch, shape.seq_len)
+    cspec = cache_shardings(cache_shape, ctx)
+    bspec = {}
+    for k, v in registry.input_specs(cfg, shape).items():
+        logical = ("batch",) + (None,) * (len(v.shape) - 1)
+        bspec[k] = NamedSharding(
+            ctx.mesh, sharding.safe_spec(v.shape, logical, ctx) if v.shape
+            else P())
+    jitted = jax.jit(step, in_shardings=(pspec, cspec, bspec),
+                     donate_argnums=1)
+    return jitted, ctx, params_shape, cache_shape
+
+
+def jit_prefill_step(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    step, ctx = make_prefill_step(cfg, shape, mesh)
+    params_shape = registry.abstract_params(cfg)
+    pspec = sharding.param_shardings(params_shape, ctx)
+    bspec = {}
+    for k, v in registry.input_specs(cfg, shape).items():
+        logical = ("batch",) + (None,) * (len(v.shape) - 1)
+        bspec[k] = NamedSharding(ctx.mesh, sharding.safe_spec(v.shape, logical, ctx))
+    jitted = jax.jit(step, in_shardings=(pspec, bspec))
+    return jitted, ctx, params_shape

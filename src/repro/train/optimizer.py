@@ -1,0 +1,141 @@
+"""Optimizers: AdamW and Adafactor, ZeRO-friendly, configurable state dtype.
+
+State lives in a plain pytree mirroring params so GSPMD shards it exactly
+like the (FSDP-sharded) parameters — that is ZeRO-1/2 for free.  Large
+models set ``opt_state_dtype=bfloat16`` (Jamba-398B) so m/v fit a v5e pod;
+Adafactor is available as the factored fallback for even tighter budgets.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"           # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(np.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def init_state(cfg: OptConfig, params) -> dict:
+    dt = jnp.dtype(cfg.state_dtype)
+    if cfg.name == "adamw":
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return {"m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+    if cfg.name == "adafactor":
+        def vrow(p):
+            return (jnp.zeros(p.shape[:-1], dt) if _factored(p.shape)
+                    else jnp.zeros(p.shape, dt))
+        def vcol(p):
+            return (jnp.zeros(p.shape[:-2] + p.shape[-1:], dt)
+                    if _factored(p.shape) else jnp.zeros((1,), dt))
+        return {"vr": jax.tree_util.tree_map(vrow, params),
+                "vc": jax.tree_util.tree_map(vcol, params),
+                "count": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.name)
+
+
+def _adamw_leaf(cfg, lr, c, p, g, m, v):
+    g = g.astype(jnp.float32)
+    mf = m.astype(jnp.float32) * cfg.b1 + (1 - cfg.b1) * g
+    vf = v.astype(jnp.float32) * cfg.b2 + (1 - cfg.b2) * g * g
+    mhat = mf / (1 - cfg.b1 ** c)
+    vhat = vf / (1 - cfg.b2 ** c)
+    upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+    if p.ndim >= 2:  # decoupled weight decay on matrices only
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+    new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+    return new_p, mf.astype(m.dtype), vf.astype(v.dtype)
+
+
+def _adafactor_leaf(cfg, lr, c, p, g, vr, vc):
+    g = g.astype(jnp.float32)
+    g2 = g * g + 1e-30
+    d = 1 - cfg.b2
+    if _factored(p.shape):
+        vrf = vr.astype(jnp.float32) * cfg.b2 + d * jnp.mean(g2, axis=-1)
+        vcf = vc.astype(jnp.float32) * cfg.b2 + d * jnp.mean(g2, axis=-2)
+        denom = jnp.sqrt(vrf[..., None] * vcf[..., None, :]
+                         / jnp.maximum(jnp.mean(vrf, -1, keepdims=True),
+                                       1e-30)[..., None])
+    else:
+        vrf = vr.astype(jnp.float32) * cfg.b2 + d * g2
+        vcf = vc.astype(jnp.float32)
+        denom = jnp.sqrt(vrf)
+    upd = g / jnp.maximum(denom, 1e-30)
+    # relative update clipping (Adafactor's d=1.0 rule)
+    rms = jnp.sqrt(jnp.mean(upd * upd) + 1e-30)
+    upd = upd / jnp.maximum(1.0, rms)
+    if p.ndim >= 2:
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+    new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+    return new_p, vrf.astype(vr.dtype), vcf.astype(vc.dtype)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(cfg: OptConfig, params, grads, state):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else jnp.float32(1.0)
+    grads = jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale), grads)
+    count = state["count"] + 1
+    lr = schedule(cfg, count)
+    if cfg.name == "adamw":
+        out = jax.tree_util.tree_map(
+            lambda p, g, m, v: _adamw_leaf(cfg, lr, count, p, g, m, v),
+            params, grads, state["m"], state["v"])
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out,
+                                            is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda o: o[2], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"m": new_m, "v": new_v, "count": count}
+    else:
+        out = jax.tree_util.tree_map(
+            lambda p, g, vr, vc: _adafactor_leaf(cfg, lr, count, p, g, vr, vc),
+            params, grads, state["vr"], state["vc"])
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out,
+                                            is_leaf=lambda x: isinstance(x, tuple))
+        new_vr = jax.tree_util.tree_map(lambda o: o[1], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+        new_vc = jax.tree_util.tree_map(lambda o: o[2], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"vr": new_vr, "vc": new_vc, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

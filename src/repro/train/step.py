@@ -1,0 +1,200 @@
+"""Train-step factory: loss, grad, DP reduction, optimizer — fully sharded.
+
+Two distribution modes:
+  * ``dp_method="stock"`` — one jit; GSPMD derives every collective
+    (the paper's "kernel network stack": convenient, implicit).
+  * ``dp_method in {int8_a2a, int8_ring, ring}`` — the step runs inside a
+    ``shard_map`` that is manual over the slow 'pod' axis; cross-pod gradient
+    reduction goes through parallel/collectives.py with int8 wire format and
+    error feedback (the paper's "embedded function mode + DPDK" analogue).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import registry
+from repro.parallel import collectives, sharding
+from repro.train import optimizer as opt
+
+LB_WEIGHT = 0.01
+Z_WEIGHT = 1e-3
+
+
+@dataclass(frozen=True)
+class TrainOptions:
+    dp_method: str = "stock"       # stock | int8_a2a | int8_ring | ring
+    microbatches: int = 1
+    remat: bool = True
+    sequence_parallel: bool = False  # Megatron-SP over the 'model' axis
+    opt: opt.OptConfig = field(default_factory=opt.OptConfig)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def xent_loss(cfg: ArchConfig, logits: jax.Array, labels: jax.Array):
+    """logits: (B, S, V) fp32; labels: (B, S) int32 (-100 = masked)."""
+    if cfg.family == "vlm":
+        logits = logits[:, -labels.shape[1]:]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (lse - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_loss_fn(cfg: ArchConfig, options: TrainOptions):
+    def loss_fn(params, batch):
+        logits, aux = registry.forward(cfg, params, batch,
+                                       remat=options.remat)
+        loss = xent_loss(cfg, logits, batch["labels"])
+        total = loss + LB_WEIGHT * aux["lb_loss"] + Z_WEIGHT * aux["z_loss"]
+        return total, {"loss": loss, "lb_loss": aux["lb_loss"],
+                       "z_loss": aux["z_loss"]}
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# state
+# ---------------------------------------------------------------------------
+
+def make_train_state(cfg: ArchConfig, options: TrainOptions, rng):
+    params = registry.init_params(cfg, rng)
+    state = {"params": params,
+             "opt": opt.init_state(options.opt, params),
+             "step": jnp.zeros((), jnp.int32)}
+    if options.dp_method != "stock":
+        state["err"] = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+    return state
+
+
+def abstract_train_state(cfg: ArchConfig, options: TrainOptions):
+    return jax.eval_shape(
+        lambda: make_train_state(cfg, options, jax.random.key(0)))
+
+
+def state_shardings(state_shape, ctx: sharding.ShardingCtx):
+    return sharding.param_shardings(state_shape, ctx)
+
+
+def batch_shardings(batch_spec: dict, ctx: sharding.ShardingCtx):
+    out = {}
+    for k, v in batch_spec.items():
+        logical = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = NamedSharding(ctx.mesh, sharding.safe_spec(v.shape, logical, ctx))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the step
+# ---------------------------------------------------------------------------
+
+def _grads_and_metrics(cfg, options, params, batch):
+    loss_fn = make_loss_fn(cfg, options)
+    n = options.microbatches
+    if n <= 1:
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return grads, metrics
+    # microbatch gradient accumulation (fp32 accumulator)
+    def split(x):
+        return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+    mbatch = jax.tree_util.tree_map(split, batch)
+
+    def body(carry, mb):
+        acc, met = carry
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, mb)
+        acc = jax.tree_util.tree_map(
+            lambda a, g: a + g.astype(jnp.float32) / n, acc, grads)
+        met = jax.tree_util.tree_map(lambda a, b: a + b / n, met, metrics)
+        return (acc, met), ()
+
+    acc0 = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    met0 = {"loss": jnp.float32(0), "lb_loss": jnp.float32(0),
+            "z_loss": jnp.float32(0)}
+    (grads, metrics), _ = jax.lax.scan(body, (acc0, met0), mbatch)
+    return grads, metrics
+
+
+def _apply(cfg, options, state, grads, metrics, errors=None):
+    new_params, new_opt, om = opt.apply_updates(
+        options.opt, state["params"], grads, state["opt"])
+    new_state = {"params": new_params, "opt": new_opt,
+                 "step": state["step"] + 1}
+    if errors is not None:
+        new_state["err"] = errors
+    metrics = dict(metrics, **om)
+    return new_state, metrics
+
+
+def make_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                    options: TrainOptions = TrainOptions()):
+    """Returns (step_fn, ctx).  step_fn(state, batch) -> (state, metrics)."""
+    multi_pod = "pod" in mesh.axis_names
+    ctx = sharding.ShardingCtx(
+        mesh, sharding.train_rules(multi_pod, options.sequence_parallel))
+
+    if options.dp_method == "stock" or not multi_pod:
+        def step(state, batch):
+            with sharding.use_ctx(ctx):
+                grads, metrics = _grads_and_metrics(cfg, options,
+                                                    state["params"], batch)
+                return _apply(cfg, options, state, grads, metrics,
+                              errors=state.get("err"))
+        return step, ctx
+
+    # manual-over-pod mode with compressed cross-pod reduction
+    inner_rules = sharding.train_rules(False, options.sequence_parallel)
+    inner_ctx = sharding.ShardingCtx(mesh, inner_rules)
+
+    def inner(state, batch):
+        with sharding.use_ctx(inner_ctx):
+            grads, metrics = _grads_and_metrics(cfg, options,
+                                                state["params"], batch)
+            grads, errors = collectives.reduce_gradients(
+                grads, "pod", options.dp_method, state.get("err"))
+            errors = (jax.tree_util.tree_map(
+                lambda e: e.astype(jnp.bfloat16), errors)
+                if errors is not None else None)
+            return _apply(cfg, options, state, grads, metrics, errors)
+
+    def step(state, batch):
+        batch_specs = jax.tree_util.tree_map(
+            lambda v: P("pod") if v.ndim else P(), batch)
+        return jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=(jax.tree_util.tree_map(lambda _: P(), state),
+                      batch_specs),
+            out_specs=(jax.tree_util.tree_map(lambda _: P(), state),
+                       jax.tree_util.tree_map(lambda _: P(),
+                                              _metric_proto(options))),
+            axis_names={"pod"}, check_vma=False)(state, batch)
+
+    return step, ctx
+
+
+def _metric_proto(options):
+    return {"loss": 0.0, "lb_loss": 0.0, "z_loss": 0.0,
+            "grad_norm": 0.0, "lr": 0.0}
+
+
+def jit_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                   options: TrainOptions = TrainOptions()):
+    """jit with explicit in/out shardings; suitable for .lower() dry-runs."""
+    step, ctx = make_train_step(cfg, shape, mesh, options)
+    state_shape = abstract_train_state(cfg, options)
+    sspec = state_shardings(state_shape, ctx)
+    bspec = batch_shardings(registry.input_specs(cfg, shape), ctx)
+    jitted = jax.jit(step, in_shardings=(sspec, bspec), donate_argnums=0)
+    return jitted, ctx, state_shape

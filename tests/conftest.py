@@ -1,0 +1,10 @@
+"""Shared fixtures.  NOTE: device count stays 1 here by design — only the
+dry-run launcher fabricates 512 devices.  Tests that need a few devices
+spawn them via the `devices8` fixture, which re-execs in a subprocess."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)

@@ -1,0 +1,83 @@
+"""Compressed / ring collectives + pipeline, on 8 forced host devices.
+
+These need >1 device, so they re-exec in a subprocess with XLA_FLAGS set
+(the main test process keeps 1 device by design)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_mesh
+from repro.parallel import collectives as C, pipeline as PP
+
+mesh = make_mesh((4, 2), ("pod", "data"))
+x = jax.random.normal(jax.random.key(0), (4, 1000))
+want = jnp.mean(x, axis=0)
+
+def run(fn):
+    f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P("pod", None),
+                              out_specs=(P("pod", None), P("pod", None)),
+                              axis_names={"pod"}, check_vma=False))
+    out, res = f(x)
+    return float(jnp.max(jnp.abs(out - want[None])))
+
+assert run(lambda g: C.ring_allreduce(g, "pod")) < 1e-5, "ring fp32 not exact"
+assert run(lambda g: C.compressed_psum(g, "pod")) < 0.05
+assert run(lambda g: C.ring_allreduce(g, "pod", wire_int8=True)) < 0.05
+
+# error feedback: compressed reduce with feedback converges to exact mean
+g = jax.random.normal(jax.random.key(1), (4, 4096))
+errs = jnp.zeros_like(g)
+f = jax.jit(jax.shard_map(
+    lambda g, e: C.compressed_psum(g + e, "pod"), mesh=mesh,
+    in_specs=(P("pod"), P("pod")), out_specs=(P("pod"), P("pod")),
+    axis_names={"pod"}, check_vma=False))
+# accumulated average of compressed reductions approaches the true mean
+acc = jnp.zeros((1, 4096))
+for i in range(20):
+    out, errs = f(g, errs)
+    acc = acc + out[:1]
+err_fb = float(jnp.max(jnp.abs(acc / 20 - jnp.mean(g, 0)[None])))
+assert err_fb < 2e-2, f"error feedback did not converge: {err_fb}"
+
+# pipeline fwd + grad exactness
+mesh2 = make_mesh((4,), ("stage",))
+D, MB, NM = 8, 4, 6
+ws = jax.random.normal(jax.random.key(1), (4, D, D)) * 0.5
+mbs = jax.random.normal(jax.random.key(2), (NM, MB, D))
+stage_fn = lambda w, x: jnp.tanh(x @ w)
+app = PP.pipeline(stage_fn, 4)
+f = jax.jit(jax.shard_map(lambda w, m: app(w, m), mesh=mesh2,
+                          in_specs=(P("stage", None, None), P(None)),
+                          out_specs=P(None), axis_names={"stage"}))
+got = f(ws, mbs)
+want2 = mbs
+for s in range(4):
+    want2 = jnp.tanh(want2 @ ws[s])
+assert jnp.allclose(got, want2, atol=1e-5), "pipeline forward mismatch"
+
+lf = PP.pipelined_loss(stage_fn, lambda o, t: jnp.mean((o - t) ** 2), 4)
+tgt = jnp.zeros_like(mbs)
+gr = jax.jit(jax.shard_map(jax.grad(lambda w: lf(w, mbs, tgt)), mesh=mesh2,
+                           in_specs=(P("stage", None, None),),
+                           out_specs=P("stage", None, None),
+                           axis_names={"stage"}))(ws)
+gref = jax.grad(lambda ws: jnp.mean((jnp.tanh(jnp.tanh(jnp.tanh(jnp.tanh(
+    mbs @ ws[0]) @ ws[1]) @ ws[2]) @ ws[3]) - tgt) ** 2))(ws)
+assert jnp.allclose(gr, gref, atol=1e-4), "pipeline grad mismatch"
+print("ALL_OK")
+"""
+
+
+def test_collectives_and_pipeline_8dev():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "ALL_OK" in out.stdout, out.stdout + out.stderr

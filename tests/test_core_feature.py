@@ -1,0 +1,79 @@
+"""The paper's core feature: stressors, class aggregation, headroom sweeps,
+offload planner decisions, analytic roofline."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core import classes, headroom, planner, stressors
+from repro.core.stressors import Result
+
+
+def test_stressor_suite_runs_and_skips_gracefully():
+    res = stressors.run_suite(duration=0.03,
+                              names=["vecmath", "memrate-1m", "allreduce",
+                                     "quant-int8", "dispatch-noop"])
+    by = {r.name: r for r in res}
+    assert by["allreduce"].skipped  # single device -> skipped, like rdrand
+    assert not by["vecmath"].skipped and by["vecmath"].bogo_ops_per_sec > 0
+    assert by["vecmath"].relative is not None
+
+
+def test_class_aggregation_matches_paper_shape():
+    res = [Result("a", ("CPU",), 10, 5, 2.0),
+           Result("b", ("CPU",), 10, 20, 0.5),
+           Result("c", ("MEMORY",), 10, 5, 2.0),
+           Result("d", ("NETWORK",), 0, None, None, skipped=True)]
+    agg = {s.name: s for s in classes.aggregate(res)}
+    assert agg["CPU"].n == 2
+    assert abs(agg["CPU"].mean_relative - 1.25) < 1e-9
+    assert "NETWORK" not in agg
+    rank = classes.ranking(res)
+    assert rank[0].relative == 2.0
+
+
+def test_headroom_delay_sweep_finds_knee():
+    out = headroom.delay_sweep(1 << 16, [8, 64], duration=0.05)
+    assert out["baseline_ops_per_sec"] > 0
+    assert out["rows"][0]["relative"] == 1.0
+    assert out["headroom_s_per_burst"] >= 0
+
+
+def test_transfer_sweep_shape():
+    rows = headroom.transfer_sweep([4096, 1 << 16], [1, 2], duration=0.03)
+    assert len(rows) == 4
+    assert all(r["gbytes_per_sec"] > 0 for r in rows)
+
+
+def test_derived_headroom_collective_bound():
+    t = headroom.RooflineTerms(0.010, 0.004, 0.018)
+    hr = headroom.derived_headroom(t)
+    assert hr["bottleneck"] == "collective"
+    assert abs(hr["headroom_s"] - 0.008) < 1e-12
+    assert "compression" in hr["advice"]
+
+
+def test_planner_rules():
+    stress = [Result("quant-int8", ("CRYPTO",), 100, 50, 2.0)]
+    # collective-bound -> in-path compression on
+    p1 = planner.make_plan(headroom.RooflineTerms(0.01, 0.004, 0.02), stress)
+    assert p1.dp_method == "int8_a2a" and p1.use_quant_kernel
+    # compute-bound -> nothing in-path (paper: don't overload the processor)
+    p2 = planner.make_plan(headroom.RooflineTerms(0.03, 0.004, 0.002), stress)
+    assert p2.dp_method == "stock"
+    assert p2.remat == "dots_saveable"
+    # memory-bound -> remat + microbatching
+    p3 = planner.make_plan(headroom.RooflineTerms(0.01, 0.05, 0.002), stress)
+    assert p3.microbatches == 2
+
+
+def test_analytic_model_flops_sane():
+    from repro.analysis import roofline as rf
+    from repro.configs import all_archs
+    from repro.configs.base import SHAPES
+    n = rf.param_count(all_archs()["command-r-plus-104b"])
+    assert 95e9 < n < 115e9, n
+    na = rf.active_param_count(all_archs()["qwen3-moe-235b-a22b"])
+    nt = rf.param_count(all_archs()["qwen3-moe-235b-a22b"])
+    assert 210e9 < nt < 260e9, nt
+    assert 18e9 < na < 30e9, na
+    mf = rf.model_flops(all_archs()["olmo-1b"], SHAPES["train_4k"])
+    assert 6e15 < mf < 9e15, mf

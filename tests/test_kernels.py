@@ -1,0 +1,75 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("B,S,H,Kv,hd", [
+    (2, 128, 4, 2, 64), (1, 256, 4, 4, 32), (2, 64, 8, 2, 16),
+    (1, 128, 2, 1, 128),
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+def test_flash_attention_matches_ref(B, S, H, Kv, hd, causal, window):
+    ks = jax.random.split(jax.random.key(42), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Kv, hd), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    assert jnp.max(jnp.abs(got - want)) < 2e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 32), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 128, 2, 32), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 128, 2, 32), jnp.float32).astype(dtype)
+    got = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    assert got.dtype == dtype
+    assert jnp.max(jnp.abs(got.astype(jnp.float32)
+                           - want.astype(jnp.float32))) < tol
+
+
+@pytest.mark.parametrize("B,T,H,dh,chunk", [
+    (2, 128, 2, 16, 32), (1, 64, 4, 32, 16), (2, 96, 1, 64, 32),
+])
+def test_rwkv6_scan_matches_ref(B, T, H, dh, chunk):
+    ks = jax.random.split(jax.random.key(7), 6)
+    r, k, v = [jax.random.normal(ks[i], (B, T, H, dh)) for i in range(3)]
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, dh))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (H, dh)) * 0.3
+    s0 = jax.random.normal(ks[5], (B, H, dh, dh)) * 0.1
+    y1, sT1 = ops.rwkv6_scan(r, k, v, w, u, s0, chunk=chunk)
+    y2, sT2 = ref.rwkv6_scan_ref(r, k, v, w, u, s0)
+    assert jnp.max(jnp.abs(y1 - y2)) < 1e-3
+    assert jnp.max(jnp.abs(sT1 - sT2)) < 1e-3
+
+
+def test_rwkv6_chunked_jnp_matches_ref():
+    from repro.models.rwkv6 import wkv_chunked
+    ks = jax.random.split(jax.random.key(3), 5)
+    B, T, H, dh = 2, 128, 2, 16
+    r, k, v = [jax.random.normal(ks[i], (B, T, H, dh)) for i in range(3)]
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, dh))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (H, dh)) * 0.3
+    y1, s1 = wkv_chunked(r, k, v, w, u)
+    y2, s2 = ref.rwkv6_scan_ref(r, k, v, w, u)
+    assert jnp.max(jnp.abs(y1 - y2)) < 1e-3
+
+
+@pytest.mark.parametrize("N,C", [(256, 512), (512, 1024), (128, 64)])
+def test_quant_kernel_matches_ref(N, C):
+    from repro import runtime
+    x = jax.random.normal(jax.random.key(5), (N, C)) * 3
+    with runtime.use_policy(quant_impl="pallas"):
+        q1, s1 = ops.quantize_int8(x)
+        xd = ops.dequantize_int8(q1, s1)
+    q2, s2 = ref.quantize_int8_ref(x)
+    assert (q1 == q2).all() and jnp.allclose(s1, s2)
+    assert jnp.max(jnp.abs(xd - x)) <= float(jnp.max(s1)) + 1e-6

@@ -1,0 +1,89 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis.hlo import shape_bytes
+from repro.analysis.hlocost import _parse_instr
+from repro.core.headroom import RooflineTerms, derived_headroom
+from repro.data.pipeline import DataConfig, synth_batch
+from repro.kernels import ref
+from repro.train.optimizer import OptConfig, schedule
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(1, 64), st.integers(1, 512), st.integers(0, 10_000))
+def test_synth_batch_deterministic_and_in_range(batch, vocab, step):
+    cfg = DataConfig(vocab_size=vocab, seq_len=16, global_batch=batch)
+    a = synth_batch(cfg, step)
+    b = synth_batch(cfg, step)
+    assert (a["tokens"] == b["tokens"]).all()
+    assert (a["tokens"] >= 0).all() and (a["tokens"] < vocab).all()
+    # labels are next-token shifted
+    full_a = np.concatenate([a["tokens"], a["labels"][:, -1:]], 1)
+    assert (full_a[:, 1:] == a["labels"]).all()
+
+
+@given(st.integers(1, 3), st.integers(2, 33), st.integers(1, 8))
+def test_quantize_roundtrip_bounded(b, c, scale):
+    x = np.linspace(-scale, scale, b * c).reshape(b, c).astype(np.float32)
+    q, s = ref.quantize_int8_ref(jnp.asarray(x))
+    xd = ref.dequantize_int8_ref(q, s)
+    assert np.all(np.abs(np.asarray(xd) - x) <= np.asarray(s) + 1e-6)
+    assert int(jnp.max(jnp.abs(q))) <= 127
+
+
+@given(st.floats(1e-6, 10), st.floats(1e-6, 10), st.floats(0, 10))
+def test_headroom_invariants(c, m, coll):
+    t = RooflineTerms(c, m, coll)
+    hr = derived_headroom(t)
+    assert 0.0 <= hr["headroom_fraction"] <= 1.0
+    assert hr["step_s"] == max(c, m, coll)
+    assert hr["bottleneck"] in ("compute", "memory", "collective")
+    if hr["bottleneck"] == "compute":
+        assert hr["headroom_s"] == 0.0
+
+
+@given(st.integers(0, 100_000))
+def test_lr_schedule_bounded_positive(step):
+    cfg = OptConfig(lr=3e-4, warmup_steps=100, decay_steps=10_000,
+                    min_lr_ratio=0.1)
+    lr = float(schedule(cfg, jnp.int32(step)))
+    assert 0.0 <= lr <= cfg.lr * (1 + 1e-6)
+    if step >= cfg.decay_steps:
+        assert abs(lr - cfg.lr * cfg.min_lr_ratio) < 1e-9
+
+
+@given(st.sampled_from(["f32", "bf16", "s8", "u32", "pred"]),
+       st.lists(st.integers(1, 64), min_size=0, max_size=4))
+def test_shape_bytes(dtype, dims):
+    nbytes = {"f32": 4, "bf16": 2, "s8": 1, "u32": 4, "pred": 1}[dtype]
+    s = f"{dtype}[{','.join(map(str, dims))}]{{}}"
+    expect = nbytes * int(np.prod(dims)) if dims else nbytes
+    assert shape_bytes(s) == expect
+
+
+def test_instr_parser_tuple_types():
+    line = ("  %while.1 = (s32[], f32[4,4]{1,0}) while(%tuple.2), "
+            "condition=%cond, body=%body, backend_config={\"known_trip_count\":{\"n\":\"7\"}}")
+    ins = _parse_instr(line)
+    assert ins["op"] == "while" and ins["name"] == "while.1"
+    assert "body=%body" in ins["rest"]
+
+
+@given(st.integers(1, 6), st.integers(1, 6))
+def test_softmax_chunked_equals_full(nq, nk):
+    """Chunked masked softmax path == full softmax (models/attention)."""
+    from repro.models.attention import _softmax_masked
+    S = 8 * nq
+    k = 8 * nk
+    scores = jnp.asarray(np.random.RandomState(nq * 7 + nk).randn(1, 1, 1, S, k),
+                         jnp.float32)
+    mask = jnp.tril(jnp.ones((S, k), bool), k=0)[None, None, None]
+    p = _softmax_masked(scores, mask)
+    assert bool(jnp.all(jnp.isfinite(p)))
+    sums = jnp.sum(p, -1)
+    assert bool(jnp.all(jnp.abs(sums - 1.0) < 1e-5))
