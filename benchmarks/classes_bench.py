@@ -1,17 +1,7 @@
-"""Paper Fig. 8 analogue: class-level aggregation — reproduces the paper's
-conclusion that class means carry std ~ mean (not statistically actionable)."""
-from repro.core import classes, stressors
+"""Paper Fig. 8 analogue — thin shim over the registered experiment
+``classes.aggregate`` (see ``repro.experiments.defs``)."""
+from repro.experiments import run_experiments
 
 
 def run(duration: float = 0.2):
-    res = stressors.run_suite(duration=duration)
-    rows = []
-    sig = 0
-    summaries = classes.aggregate(res)
-    for s in summaries:
-        rows.append(("fig8_classes", f"{s.name}_mean", s.mean_relative))
-        rows.append(("fig8_classes", f"{s.name}_std", s.std_relative))
-        sig += int(s.significant)
-    rows.append(("fig8_classes", "significant_classes", sig))
-    rows.append(("fig8_classes", "total_classes", len(summaries)))
-    return rows
+    return run_experiments(duration=duration, only=["classes"]).records

@@ -1,30 +1,8 @@
-"""Paper Fig. 1-4 analogue: transfer throughput sweeps + delay injection.
-
-Fig 1/3: throughput vs message size x workers (in-path processor vs 'host' =
-larger worker budget).  Fig 2/4: max tolerable injected compute before the
-transfer rate drops — the processing-headroom measurement."""
-from repro.core import headroom
+"""Paper Fig. 1-4 analogue — thin shim over the registered experiments
+``headroom.transfer_nic`` / ``headroom.transfer_host`` /
+``headroom.delay_sweep`` (see ``repro.experiments.defs``)."""
+from repro.experiments import run_experiments
 
 
 def run(duration: float = 0.25):
-    rows = []
-    # Fig 1 analogue: constrained "SmartNIC-like" worker budget
-    for r in headroom.transfer_sweep([1 << 12, 1 << 16, 1 << 20],
-                                     workers=[1, 2], duration=duration):
-        rows.append(("fig1_transfer_nic", f"w{r['workers']}_m{r['message_bytes']}",
-                     r["gbytes_per_sec"]))
-    # Fig 3 analogue: "host" budget (more workers)
-    for r in headroom.transfer_sweep([1 << 16, 1 << 20], workers=[4, 8],
-                                     duration=duration):
-        rows.append(("fig3_transfer_host", f"w{r['workers']}_m{r['message_bytes']}",
-                     r["gbytes_per_sec"]))
-    # Fig 2/4 analogue: delay sweep
-    out = headroom.delay_sweep(1 << 20, [16, 48, 96, 160, 256],
-                               duration=duration)
-    for r in out["rows"]:
-        rows.append(("fig2_delay_sweep", f"matmul{r['matmul']}", r["relative"]))
-    rows.append(("fig2_delay_sweep", "headroom_us_per_burst",
-                 out["headroom_s_per_burst"] * 1e6))
-    rows.append(("fig2_delay_sweep", "headroom_fraction",
-                 out["headroom_fraction"]))
-    return rows
+    return run_experiments(duration=duration, only=["headroom"]).records

@@ -1,29 +1,27 @@
-"""Paper Fig. 5-6 analogue: embedded-function-mode — in-path transforms in
-the collective. Needs >1 device; run via subprocess with forced devices."""
+"""Paper Fig. 5-6 analogue: embedded-function-mode collectives.
+
+Needs >1 device, so this shim demonstrates the launch-once idiom: re-exec
+the unified CLI in a subprocess with fabricated host devices and read the
+``Record`` stream back over JSONL — the same schema round-trips across the
+process boundary.
+"""
+import io
 import os
 import subprocess
 import sys
 
-
-SCRIPT = """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-from repro.core import inpath
-for r in inpath.measure(size=1 << 18, iters=10):
-    print(f"ROW,{r.method},{r.wall_s_per_call*1e6:.1f},{r.wire_bytes_per_device},{r.max_error:.5f}")
-"""
+from repro.experiments.record import Record, read_jsonl
 
 
-def run(duration: float = 0.0):
+def run(duration: float = 0.1, devices: int = 8):
     env = dict(os.environ, PYTHONPATH="src")
-    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                         capture_output=True, text=True, timeout=600)
-    rows = []
-    for ln in out.stdout.splitlines():
-        if ln.startswith("ROW,"):
-            _, method, us, wire, err = ln.split(",")
-            rows.append(("fig5_inpath", f"{method}_us_per_call", float(us)))
-            rows.append(("fig5_inpath", f"{method}_wire_bytes", int(wire)))
-    if not rows:
-        rows.append(("fig5_inpath", "error", out.stderr[-200:]))
-    return rows
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.experiments", "--only", "inpath",
+         "--devices", str(devices), "--duration", str(duration),
+         "--format", "jsonl"],
+        env=env, capture_output=True, text=True, timeout=600)
+    records = list(read_jsonl(io.StringIO(out.stdout)))
+    if not records:
+        records.append(Record("inpath.collectives", "-", "error", error=True,
+                              reason=out.stderr[-200:]))
+    return records

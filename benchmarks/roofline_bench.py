@@ -1,19 +1,7 @@
-"""Roofline table from the dry-run artifacts (section Roofline/Dry-run)."""
-import glob
-import json
-import os
+"""Roofline table from the dry-run artifacts — thin shim over the
+registered experiment ``roofline.table`` (see ``repro.experiments.defs``)."""
+from repro.experiments import run_experiments
 
 
-def run(duration: float = 0.0, dryrun_dir: str = "experiments/dryrun"):
-    rows = []
-    files = sorted(glob.glob(os.path.join(dryrun_dir, "*.json")))
-    if not files:
-        return [("roofline", "missing",
-                 "run: python -m repro.launch.dryrun --all --mesh both")]
-    for f in files:
-        d = json.load(open(f))
-        tag = f"{d['arch']}.{d['shape']}.{d['mesh']}"
-        rows.append(("roofline", tag + ".bottleneck", d["bottleneck"]))
-        rows.append(("roofline", tag + ".fraction",
-                     round(d["roofline_fraction"], 4)))
-    return rows
+def run(duration: float = 0.0):
+    return run_experiments(duration=duration, only=["roofline"]).records

@@ -1,36 +1,12 @@
-# One function per paper table/figure. Prints ``name,metric,value`` CSV.
-import argparse
+# Back-compat entry point: the benchmark harness is the unified experiment
+# CLI now.  Same flags (--only headroom,stressors,classes,inpath,roofline
+# map onto registry family prefixes; --duration unchanged) plus --format,
+# --out, --devices, --list.  Exits nonzero when an experiment errors.
+#
+#   PYTHONPATH=src python benchmarks/run.py --only stressors --duration 0.1
 import sys
 
-
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None,
-                    help="comma-separated benchmark names")
-    ap.add_argument("--duration", type=float, default=0.25)
-    args = ap.parse_args()
-
-    from benchmarks import (classes_bench, headroom, inpath_bench,
-                            roofline_bench, stressors_bench)
-    benches = {
-        "headroom": headroom.run,           # paper Fig. 1-4
-        "stressors": stressors_bench.run,   # paper Fig. 7 / Table III
-        "classes": classes_bench.run,       # paper Fig. 8
-        "inpath": inpath_bench.run,         # paper Fig. 5-6
-        "roofline": roofline_bench.run,     # dry-run roofline table
-    }
-    only = set(args.only.split(",")) if args.only else set(benches)
-    print("name,metric,value")
-    for name, fn in benches.items():
-        if name not in only:
-            continue
-        try:
-            for row in fn(duration=args.duration):
-                print(",".join(str(x) for x in row))
-        except Exception as e:  # keep the harness going
-            print(f"{name},ERROR,{type(e).__name__}: {e}")
-    sys.stdout.flush()
-
+from repro.experiments.__main__ import main
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

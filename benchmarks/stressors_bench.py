@@ -1,14 +1,7 @@
-"""Paper Fig. 7 analogue: the stressor battery, relative to the numpy
-reference platform (RPi4 analogue)."""
-from repro.core import stressors
+"""Paper Fig. 7 analogue — thin shim over the registered experiment
+``stressors.suite`` (see ``repro.experiments.defs``)."""
+from repro.experiments import run_experiments
 
 
 def run(duration: float = 0.3):
-    rows = []
-    for r in stressors.run_suite(duration=duration):
-        if r.skipped:
-            rows.append(("fig7_stressors", r.name, "skipped"))
-        else:
-            rows.append(("fig7_stressors", r.name,
-                         r.relative if r.relative is not None else ""))
-    return rows
+    return run_experiments(duration=duration, only=["stressors"]).records

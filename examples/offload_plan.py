@@ -9,7 +9,7 @@ import sys
 from repro.core.headroom import RooflineTerms, derived_headroom
 from repro.core.planner import make_plan
 from repro.core.stressors import run_suite
-from repro.core.classes import aggregate, ranking
+from repro.core.classes import aggregate, is_significant, ranking
 
 
 def main():
@@ -35,7 +35,7 @@ def main():
     print("top profitable operations (Table III analogue):")
     for r in ranking(res)[:6]:
         print(f"  {r.name:22s} {r.relative:6.2f}x reference")
-    sig = [s for s in aggregate(res) if s.significant]
+    sig = [s for s in aggregate(res) if is_significant(s)]
     print(f"classes with mean > std: {len(sig)} "
           "(paper: class aggregates are rarely actionable)")
 

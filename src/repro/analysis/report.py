@@ -1,12 +1,74 @@
-"""Render the EXPERIMENTS.md roofline table from dry-run JSONs."""
+"""Render tables from experiment ``Record`` streams and dry-run JSONs.
+
+Two consumers of the unified schema:
+
+  * ``dryrun_records`` lifts compiled dry-run JSONs into Records — this is
+    what the ``roofline.table`` experiment emits through the Runner.
+  * ``records_table`` renders any Record stream (from ``Runner.run`` or
+    read back via ``read_jsonl``) as a markdown table, replacing the
+    per-module formatting the seed scattered across ``benchmarks/``.
+
+``table`` keeps the original EXPERIMENTS.md roofline view.
+"""
 from __future__ import annotations
 
 import glob
 import json
 import sys
+from typing import Iterable
+
+from repro.experiments.record import Record
+
+ROOFLINE_EXPERIMENT = "roofline.table"
+
+
+def dryrun_records(dirname: str = "experiments/dryrun",
+                   mesh: str = None) -> list[Record]:
+    """One Record per dry-run cell: value = roofline fraction, params carry
+    the three terms and the bottleneck."""
+    records = []
+    for f in sorted(glob.glob(f"{dirname}/*.json")):
+        d = json.load(open(f))
+        if mesh and d["mesh"] != mesh:
+            continue
+        name = f"{d['arch']}.{d['shape']}.{d['mesh']}"
+        records.append(Record(
+            ROOFLINE_EXPERIMENT, name, "roofline_fraction",
+            round(d["roofline_fraction"], 4),
+            params={"bottleneck": d["bottleneck"],
+                    "compute_s": d["compute_s"], "memory_s": d["memory_s"],
+                    "collective_s": d["collective_s"],
+                    "n_chips": d["n_chips"],
+                    "useful_ratio": round(d["useful_ratio"], 4),
+                    "peak_memory_bytes": d["peak_memory_bytes"]}))
+    if not records:
+        records.append(Record(
+            ROOFLINE_EXPERIMENT, "-", "skip", skipped=True,
+            reason=f"no dry-run artifacts in {dirname}; run: "
+                   "python -m repro.launch.dryrun --all --mesh both"))
+    return records
+
+
+def records_table(records: Iterable[Record]) -> str:
+    """Markdown table over any unified-schema Record stream."""
+    out = ["| experiment | name | metric | value | unit | relative | note |",
+           "|---|---|---|---|---|---|---|"]
+    for r in records:
+        if r.skipped or r.error:
+            note = ("ERROR: " if r.error else "SKIP: ") + r.reason
+            out.append(f"| {r.experiment} | {r.name} | {r.metric} "
+                       f"| | | | {note} |")
+            continue
+        val = (f"{r.value:.4g}" if isinstance(r.value, float) else
+               "" if r.value is None else str(r.value))
+        rel = f"{r.relative:.3f}" if r.relative is not None else ""
+        out.append(f"| {r.experiment} | {r.name} | {r.metric} "
+                   f"| {val} | {r.unit} | {rel} | |")
+    return "\n".join(out)
 
 
 def table(dirname: str = "experiments/dryrun", mesh: str = None) -> str:
+    """The original roofline table over dry-run JSONs."""
     rows = []
     for f in sorted(glob.glob(f"{dirname}/*.json")):
         d = json.load(open(f))

@@ -175,6 +175,22 @@ class CellRoofline:
         d["roofline_fraction"] = self.roofline_fraction
         return d
 
+    def to_records(self):
+        """Emit this cell in the unified experiment Record schema."""
+        from repro.experiments.record import Record
+        name = f"{self.arch}.{self.shape}.{self.mesh}"
+        base = {"bottleneck": self.bottleneck, "n_chips": self.n_chips}
+        return [
+            Record("roofline.table", name, "roofline_fraction",
+                   self.roofline_fraction,
+                   params=dict(base, compute_s=self.compute_s,
+                               memory_s=self.memory_s,
+                               collective_s=self.collective_s,
+                               useful_ratio=self.useful_ratio)),
+            Record("roofline.table", name, "step_s", self.step_s, unit="s",
+                   params=base),
+        ]
+
 
 def analyze(cfg: ArchConfig, shape: ShapeConfig, mesh_name: str,
             n_chips: int, compiled, lowered=None,

@@ -1,4 +1,9 @@
 """The paper's contribution as a first-class feature: characterization-driven
-offload (headroom probe + stressor suite + planner + in-path transforms)."""
+offload (headroom probe + stressor suite + planner + in-path transforms).
+
+All characterizations emit the unified ``repro.experiments.Record`` schema
+and run through the ``repro.experiments`` Runner/CLI; the modules here hold
+the measurements themselves."""
 from repro.core.headroom import RooflineTerms, derived_headroom  # noqa: F401
 from repro.core.planner import OffloadPlan, make_plan  # noqa: F401
+from repro.experiments.record import Record  # noqa: F401

@@ -2,36 +2,32 @@
 
 The paper's finding: class-level averages carry standard deviations as
 large as the means, so only individual-stressor profiles are actionable.
-``aggregate`` reproduces that analysis; ``significant_classes`` returns the
-classes (if any) whose mean exceeds one standard deviation — expected to be
-few/none, matching the paper.
+``aggregate`` reproduces that analysis over the unified ``Record`` stream
+and emits Records itself (experiment ``classes.aggregate``, one per
+class); ``significant_classes`` returns the classes (if any) whose mean
+exceeds one standard deviation — expected to be few/none, matching the
+paper.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Optional
+from typing import Iterable
 
 import numpy as np
 
-from repro.core.stressors import Result
+from repro.experiments.record import Record
+
+EXPERIMENT = "classes.aggregate"
 
 ALL_CLASSES = ["CPU", "CPU_CACHE", "MEMORY", "VM", "NETWORK", "PIPE_IO",
                "IO", "FILESYSTEM", "SCHEDULER", "INTERRUPT", "OS", "CRYPTO"]
 
 
-@dataclass
-class ClassSummary:
-    name: str
-    n: int
-    mean_relative: float
-    std_relative: float
+def aggregate(results: Iterable[Record]) -> list[Record]:
+    """Per-class mean relative performance over stressor Records.
 
-    @property
-    def significant(self) -> bool:
-        return self.n >= 2 and self.mean_relative > self.std_relative
-
-
-def aggregate(results: list[Result]) -> list[ClassSummary]:
+    Each output Record: value = mean relative, ``params`` carries n and
+    std_relative (the paper's error bar)."""
+    results = list(results)
     out = []
     for cls in ALL_CLASSES:
         vals = [r.relative for r in results
@@ -39,17 +35,27 @@ def aggregate(results: list[Result]) -> list[ClassSummary]:
         if not vals:
             continue
         arr = np.array(vals, np.float64)
-        out.append(ClassSummary(cls, len(vals), float(arr.mean()),
-                                float(arr.std())))
+        out.append(Record(EXPERIMENT, cls, "mean_relative",
+                          float(arr.mean()), relative=float(arr.mean()),
+                          params={"n": len(vals),
+                                  "std_relative": float(arr.std())}))
     return out
 
 
-def significant_classes(summaries: list[ClassSummary]) -> list[str]:
-    return [s.name for s in summaries if s.significant]
+def is_significant(summary: Record) -> bool:
+    """Mean exceeds one std with >= 2 samples — the paper's actionability
+    bar (rarely met, by design of the analysis)."""
+    return (summary.params.get("n", 0) >= 2
+            and summary.value is not None
+            and summary.value > summary.params.get("std_relative", 0.0))
 
 
-def ranking(results: list[Result]) -> list[Result]:
-    """Stressors ordered by relative performance (best offload targets first),
-    the paper's Table III analogue."""
+def significant_classes(summaries: Iterable[Record]) -> list[str]:
+    return [s.name for s in summaries if is_significant(s)]
+
+
+def ranking(results: Iterable[Record]) -> list[Record]:
+    """Stressors ordered by relative performance (best offload targets
+    first), the paper's Table III analogue."""
     live = [r for r in results if not r.skipped and r.relative is not None]
     return sorted(live, key=lambda r: -r.relative)

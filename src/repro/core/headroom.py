@@ -10,7 +10,9 @@ Two modes:
 * **Measured** (runs on this container's CPU backend, and unchanged on a
   real TPU): ``transfer_sweep`` maps throughput vs message size / workers
   (Fig. 1/3); ``delay_sweep`` injects synthetic compute into the jitted
-  transfer step and finds the knee (Fig. 2/4).
+  transfer step and finds the knee (Fig. 2/4).  Both emit the unified
+  ``Record`` schema and time through the shared ``experiments.measure``
+  harness.
 
 * **Derived** (from the dry-run roofline): ``derived_headroom`` converts a
   cell's (compute, memory, collective) seconds into the headroom available
@@ -19,76 +21,91 @@ Two modes:
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+
+from repro.experiments.measure import measure
+from repro.experiments.record import Record
 
 
 # ---------------------------------------------------------------------------
 # measured mode
 # ---------------------------------------------------------------------------
 
-def _throughput(fn, duration: float = 0.3) -> float:
-    fn()
-    n, t0 = 0, time.perf_counter()
-    while time.perf_counter() - t0 < duration:
-        out = fn()
-        n += 1
-    jax.block_until_ready(out)
-    return n / (time.perf_counter() - t0)
-
-
 def transfer_sweep(message_bytes: list[int], workers: list[int],
-                   duration: float = 0.3) -> list[dict]:
+                   duration: float = 0.3,
+                   experiment: str = "headroom.transfer") -> list[Record]:
     """Throughput (GB/s) of a streaming 'transfer' vs message size & workers.
 
     The transfer proxy is an HBM-rate stream op per worker buffer (on a real
     deployment this is the ICI/DCN send; the shape of the curve — small
     messages can't fill the pipe — is the object of study, as in Fig. 1/3)."""
-    rows = []
+    records = []
     for w in workers:
         for nbytes in message_bytes:
             n = max(nbytes // 4, 1)
             bufs = [jnp.ones((n,), jnp.float32) for _ in range(w)]
             f = jax.jit(lambda *xs: [x * 2.0 + 1.0 for x in xs])
-            thr = _throughput(lambda: f(*bufs), duration)
-            rows.append({"workers": w, "message_bytes": nbytes,
-                         "ops_per_sec": thr,
-                         "gbytes_per_sec": thr * nbytes * w * 2 / 1e9})
-    return rows
+            m = measure(lambda: f(*bufs), duration)
+            records.append(Record(
+                experiment, f"w{w}_m{nbytes}", "gbytes_per_sec",
+                m.calls_per_sec * nbytes * w * 2 / 1e9, unit="GB/s",
+                params={"workers": w, "message_bytes": nbytes,
+                        "ops_per_sec": m.calls_per_sec,
+                        "median_s": m.median_s, "p90_s": m.p90_s}))
+    return records
 
 
 def delay_sweep(message_bytes: int, matmul_sizes: list[int],
-                duration: float = 0.3, tol: float = 0.10) -> dict:
+                duration: float = 0.3, tol: float = 0.10,
+                experiment: str = "headroom.delay_sweep") -> list[Record]:
     """Inject synthetic offloaded compute into the transfer step (Fig. 2/4).
 
-    Returns the sweep rows plus the knee: the largest injected-compute size
-    whose transfer throughput stays within (1 - tol) of baseline, and the
-    implied headroom seconds per burst."""
+    Emits one Record per injected-compute size (metric ``relative`` — the
+    throughput fraction of baseline) and summary Records for the knee (the
+    largest size staying within ``1 - tol`` of baseline) and the implied
+    headroom seconds per burst."""
     n = max(message_bytes // 4, 1)
     buf = jnp.ones((n,), jnp.float32)
 
     base_f = jax.jit(lambda x: x * 2.0 + 1.0)
-    base = _throughput(lambda: base_f(buf), duration)
-    rows = [{"matmul": 0, "ops_per_sec": base, "relative": 1.0}]
+    base = measure(lambda: base_f(buf), duration).calls_per_sec
+    records = [Record(experiment, "matmul0", "ops_per_sec", base,
+                      unit="ops/s", relative=1.0, params={"matmul": 0})]
     knee, headroom_s = 0, 0.0
     for m in matmul_sizes:
         w = jnp.ones((m, m), jnp.float32)
         f = jax.jit(lambda x, w: (x * 2.0 + 1.0, w @ w))
-        thr = _throughput(lambda: f(buf, w), duration)
+        thr = measure(lambda: f(buf, w), duration).calls_per_sec
         rel = thr / base
-        rows.append({"matmul": m, "ops_per_sec": thr, "relative": rel})
+        records.append(Record(experiment, f"matmul{m}", "ops_per_sec", thr,
+                              unit="ops/s", relative=rel,
+                              params={"matmul": m}))
         if rel >= 1.0 - tol:
             knee = m
             # injected work absorbed per burst, in seconds
             headroom_s = max(headroom_s, 1.0 / thr - 1.0 / base)
-    return {"baseline_ops_per_sec": base, "rows": rows, "knee_matmul": knee,
-            "headroom_s_per_burst": max(headroom_s, 0.0),
-            "headroom_fraction": max(headroom_s, 0.0) * base}
+    headroom_s = max(headroom_s, 0.0)
+    records.append(Record(experiment, "knee", "matmul_size", knee,
+                          params={"tol": tol}))
+    records.append(Record(experiment, "headroom", "s_per_burst", headroom_s,
+                          unit="s"))
+    records.append(Record(experiment, "headroom", "fraction",
+                          headroom_s * base))
+    return records
+
+
+def sweep_summary(records: list[Record]) -> dict:
+    """Pull the delay-sweep summary values back out of the Record stream."""
+    by = {(r.name, r.metric): r for r in records}
+    return {
+        "baseline_ops_per_sec": by[("matmul0", "ops_per_sec")].value,
+        "knee_matmul": by[("knee", "matmul_size")].value,
+        "headroom_s_per_burst": by[("headroom", "s_per_burst")].value,
+        "headroom_fraction": by[("headroom", "fraction")].value,
+    }
 
 
 # ---------------------------------------------------------------------------

@@ -4,76 +4,84 @@ The paper's Fig. 5/6: put the processor *in the data path* (embedded
 function mode) and measure how much CPU remains; compare the kernel network
 stack against a user-space stack (DPDK).
 
-TPU mapping: run an all-reduce over a mesh axis three ways and measure
+TPU mapping: run an all-reduce over a mesh axis four ways and measure
 (a) wall time on this backend and (b) wire bytes per device, which on real
 hardware is the collective-term denominator:
 
   stock      — jax.lax.pmean (XLA's collective stack = "kernel stack")
   ring       — explicit ppermute ring            ("user-space stack")
-  int8_ring  — ring with per-hop int8 compression ("+ offloaded transform")
+  int8_a2a   — all_to_all with int8 compression  ("+ offloaded transform")
+  int8_ring  — ring with per-hop int8 compression (deepest in-path variant)
+
+Emits the unified ``Record`` schema; ``relative`` is the slowdown vs the
+stock stack (stock == 1.0).
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.experiments.measure import measure as _measure
+from repro.experiments.record import Record
 from repro.parallel import collectives as C
+from repro.parallel import compat
 
+EXPERIMENT = "inpath.collectives"
 
-@dataclass
-class InPathResult:
-    method: str
-    wall_s_per_call: float
-    wire_bytes_per_device: int
-    max_error: float
+SCALE_BYTES = 4  # fp32 quantization scale carried per compressed block
 
 
 def _wire_bytes(n: int, size: int, method: str) -> int:
-    """Per-device wire bytes for an all-reduce of `size` fp32 elements."""
+    """Per-device wire bytes for an all-reduce of ``size`` fp32 elements.
+
+    Compressed methods ship 1 B/element payload plus one fp32 scale per
+    block: ``int8_a2a`` quantizes per chunk row (n blocks of size/n
+    elements, see ``collectives.compressed_psum``), ``int8_ring``
+    requantizes per hop (one block per hop)."""
     full = size * 4
     if method == "stock":
         return int(2 * (n - 1) / n * full)          # ring all-reduce, fp32
     if method == "ring":
         return int(2 * (n - 1) / n * full)          # same schedule, explicit
     if method == "int8_a2a":
-        return int(2 * (n - 1) / n * (size * 1 + size / max(size, 1) * 4))
+        # n chunk-blocks, each int8 payload + fp32 scale, both phases
+        return int(2 * (n - 1) / n * (size + n * SCALE_BYTES))
     if method == "int8_ring":
-        return int(2 * (n - 1) / n * size * 1)      # int8 on every hop
+        # int8 on every hop; each hop carries one chunk + its scale
+        return int(2 * (n - 1) / n * size + 2 * (n - 1) * SCALE_BYTES)
     raise ValueError(method)
 
 
-def measure(size: int = 1 << 20, iters: int = 20) -> list[InPathResult]:
+def measure(size: int = 1 << 20, duration: float = 0.3) -> list[Record]:
     n = len(jax.devices())
     if n < 2:
         raise RuntimeError("in-path measurement needs >= 2 devices "
                            "(run under --xla_force_host_platform_device_count)")
-    mesh = jax.make_mesh((n,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((n,), ("pod",))
     x = jax.random.normal(jax.random.key(0), (n, size), jnp.float32)
     want = jnp.mean(x, axis=0)
 
-    def run(fn, method):
-        f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P("pod"),
-                                  out_specs=P("pod"), check_vma=False))
+    def run(fn, method, stock_s=None):
+        f = jax.jit(compat.shard_map(fn, mesh=mesh, in_specs=P("pod"),
+                                     out_specs=P("pod"), check=False))
+        m = _measure(lambda: f(x), duration)
         out = f(x)
-        jax.block_until_ready(out)
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            out = f(x)
-        jax.block_until_ready(out)
-        dt = (time.perf_counter() - t0) / iters
         err = float(jnp.max(jnp.abs(out - want[None])))
-        return InPathResult(method, dt, _wire_bytes(n, size, method), err)
+        wall = m.s_per_call
+        return Record(
+            EXPERIMENT, method, "wall_s_per_call", wall, unit="s",
+            relative=wall / stock_s if stock_s else 1.0,
+            params={"wire_bytes_per_device": _wire_bytes(n, size, method),
+                    "max_error": err, "size": size, "devices": n,
+                    "median_s": m.median_s, "p90_s": m.p90_s})
 
+    stock = run(lambda g: jax.lax.pmean(g, "pod") + 0 * g, "stock")
+    stock_s = stock.value
     return [
-        run(lambda g: jax.lax.pmean(g, "pod") + 0 * g, "stock"),
-        run(lambda g: C.ring_allreduce(g, "pod")[0], "ring"),
-        run(lambda g: C.compressed_psum(g, "pod")[0], "int8_a2a"),
+        stock,
+        run(lambda g: C.ring_allreduce(g, "pod")[0], "ring", stock_s),
+        run(lambda g: C.compressed_psum(g, "pod")[0], "int8_a2a", stock_s),
         run(lambda g: C.ring_allreduce(g, "pod", wire_int8=True)[0],
-            "int8_ring"),
+            "int8_ring", stock_s),
     ]

@@ -19,11 +19,11 @@ Decision rules (each traceable to a paper finding, see DESIGN.md section 6):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Iterable, Optional
 
 from repro.core.classes import ranking
 from repro.core.headroom import RooflineTerms, derived_headroom
-from repro.core.stressors import Result
+from repro.experiments.record import Record
 
 
 @dataclass
@@ -36,17 +36,20 @@ class OffloadPlan:
     ranking: list = field(default_factory=list)
 
 
-def make_plan(terms: RooflineTerms, stressor_results: list[Result],
+def make_plan(terms: RooflineTerms, stressor_records: Iterable[Record],
               multi_pod: bool = True,
               bytes_per_device: Optional[float] = None,
               hbm_bytes: float = 16e9) -> OffloadPlan:
+    """Decide the offload configuration from the roofline terms plus the
+    unified ``Record`` stream of the stressor suite (``stressors.suite``
+    rows, as emitted by the experiment Runner or read back from JSONL)."""
     plan = OffloadPlan()
     hr = derived_headroom(terms)
     plan.notes.append(f"bottleneck={hr['bottleneck']} "
                       f"headroom={hr['headroom_fraction']:.1%} "
                       f"({hr['free_offload_gflops']:.1f} GFLOP free per step)")
 
-    rank = ranking(stressor_results)
+    rank = ranking(stressor_records)
     plan.ranking = [(r.name, r.relative) for r in rank]
     by_name = {r.name: r for r in rank}
 

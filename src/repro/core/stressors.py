@@ -22,15 +22,18 @@ from __future__ import annotations
 
 import json
 import os
-import shutil
 import tempfile
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.experiments.measure import measure
+from repro.experiments.record import Record
+
+EXPERIMENT = "stressors.suite"
 
 
 @dataclass
@@ -41,32 +44,6 @@ class Stressor:
     make_ref: Optional[Callable[[], Callable[[], object]]]  # numpy reference
     work_items: int = 1                              # ops per invocation
     requires_devices: int = 1
-
-
-@dataclass
-class Result:
-    name: str
-    classes: tuple[str, ...]
-    bogo_ops_per_sec: float
-    ref_ops_per_sec: Optional[float]
-    relative: Optional[float]
-    skipped: bool = False
-    reason: str = ""
-
-
-def _timeit(fn: Callable[[], object], duration: float) -> float:
-    """Run fn repeatedly for ~duration seconds; return calls/sec."""
-    fn()  # warmup / compile
-    n, t0 = 0, time.perf_counter()
-    deadline = t0 + duration
-    while time.perf_counter() < deadline:
-        out = fn()
-        n += 1
-    if hasattr(out, "block_until_ready"):
-        out.block_until_ready()
-    elif isinstance(out, (list, tuple)) and hasattr(out[0], "block_until_ready"):
-        out[0].block_until_ready()
-    return n / (time.perf_counter() - t0)
 
 
 # ---------------------------------------------------------------------------
@@ -375,11 +352,11 @@ def _registry() -> list[Stressor]:
     # ---- NETWORK: collectives (need >= 2 devices) ----
     def mk_psum():
         from jax.sharding import PartitionSpec as P
+        from repro.parallel import compat
         n = len(jax.devices())
-        mesh = jax.make_mesh((n,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((n,), ("x",))
         x = jnp.ones((n, 1 << 16))
-        f = jax.jit(jax.shard_map(
+        f = jax.jit(compat.shard_map(
             lambda x: jax.lax.psum(x, "x"), mesh=mesh,
             in_specs=P("x"), out_specs=P()))
         return lambda: f(x)
@@ -388,11 +365,11 @@ def _registry() -> list[Stressor]:
 
     def mk_a2a():
         from jax.sharding import PartitionSpec as P
+        from repro.parallel import compat
         n = len(jax.devices())
-        mesh = jax.make_mesh((n,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((n,), ("x",))
         x = jnp.ones((n, n, 1 << 12))
-        f = jax.jit(jax.shard_map(
+        f = jax.jit(compat.shard_map(
             lambda x: jax.lax.all_to_all(x, "x", 1, 0, tiled=False),
             mesh=mesh, in_specs=P("x"), out_specs=P("x")))
         return lambda: f(x)
@@ -402,13 +379,13 @@ def _registry() -> list[Stressor]:
     def mk_compressed_ar():
         from jax.sharding import PartitionSpec as P
         from repro.parallel import collectives as C
+        from repro.parallel import compat
         n = len(jax.devices())
-        mesh = jax.make_mesh((n,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((n,), ("x",))
         x = jnp.ones((n, 1 << 16))
-        f = jax.jit(jax.shard_map(
+        f = jax.jit(compat.shard_map(
             lambda x: C.compressed_psum(x, "x")[0], mesh=mesh,
-            in_specs=P("x"), out_specs=P("x"), check_vma=False))
+            in_specs=P("x"), out_specs=P("x"), check=False))
         return lambda: f(x)
 
     add("allreduce-int8", ["NETWORK", "CRYPTO"], mk_compressed_ar, None,
@@ -418,26 +395,37 @@ def _registry() -> list[Stressor]:
 
 
 def run_suite(duration: float = 0.5, names: Optional[list[str]] = None,
-              with_reference: bool = True) -> list[Result]:
-    results = []
+              with_reference: bool = True) -> list[Record]:
+    """Run the battery; one ``Record`` per stressor (bogo-ops/s, with the
+    numpy-reference relative when a reference implementation exists)."""
+    records = []
     for s in _registry():
         if names and s.name not in names:
             continue
+        params = {"classes": list(s.classes)}
         if len(jax.devices()) < s.requires_devices:
-            results.append(Result(s.name, s.classes, 0.0, None, None,
-                                  skipped=True,
-                                  reason=f"needs >= {s.requires_devices} devices"))
+            records.append(Record(
+                EXPERIMENT, s.name, "bogo_ops_per_sec", params=params,
+                skipped=True,
+                reason=f"needs >= {s.requires_devices} devices"))
             continue
         try:
             fn = s.make()
-            ops = _timeit(fn, duration) * s.work_items
-            ref_ops = rel = None
+            m = measure(fn, duration)
+            ops = m.calls_per_sec * s.work_items
+            rel = None
             if with_reference and s.make_ref is not None:
                 rfn = s.make_ref()
-                ref_ops = _timeit(rfn, duration) * s.work_items
+                ref_ops = measure(rfn, duration).calls_per_sec * s.work_items
+                params["ref_ops_per_sec"] = ref_ops
                 rel = ops / ref_ops if ref_ops else None
-            results.append(Result(s.name, s.classes, ops, ref_ops, rel))
+            params["median_s"] = m.median_s
+            params["p90_s"] = m.p90_s
+            records.append(Record(EXPERIMENT, s.name, "bogo_ops_per_sec",
+                                  ops, unit="ops/s", relative=rel,
+                                  params=params))
         except Exception as e:  # capability-missing, like stress-ng skips
-            results.append(Result(s.name, s.classes, 0.0, None, None,
-                                  skipped=True, reason=f"{type(e).__name__}: {e}"))
-    return results
+            records.append(Record(
+                EXPERIMENT, s.name, "bogo_ops_per_sec", params=params,
+                skipped=True, reason=f"{type(e).__name__}: {e}"))
+    return records

@@ -1,0 +1,21 @@
+"""Unified Experiment API: one registry, schema, and runner for every
+paper characterization.
+
+    from repro.experiments import Record, Runner, experiment, measure
+
+Submodules:
+  record    — the ``Record`` schema + JSONL/CSV emitters
+  measure   — the shared timing harness (warmup / sync / quantiles)
+  registry  — ``@experiment`` decorator, specs, SKIP requirements
+  runner    — ``Runner``/``run_experiments`` over the registry
+  defs      — built-in registrations (loaded lazily via ``load_builtin``)
+
+CLI: ``PYTHONPATH=src python -m repro.experiments --help``.
+"""
+from repro.experiments.measure import Measurement, measure  # noqa: F401
+from repro.experiments.record import (Record, read_csv, read_jsonl,  # noqa: F401
+                                      write_csv, write_jsonl)
+from repro.experiments.registry import (Experiment, ExperimentSpec,  # noqa: F401
+                                        all_experiments, experiment,
+                                        load_builtin, select)
+from repro.experiments.runner import Runner, RunReport, run_experiments  # noqa: F401

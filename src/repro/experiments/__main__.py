@@ -1,0 +1,95 @@
+"""CLI: run registered experiments and emit the unified Record stream.
+
+    PYTHONPATH=src python -m repro.experiments [--only headroom,stressors]
+        [--duration 0.25] [--format csv|jsonl] [--out FILE] [--devices N]
+        [--list]
+
+Exit status is nonzero when any experiment errors (SKIPs are not errors) —
+the seed's ``benchmarks/run.py`` swallowed exceptions and always exited 0.
+``--devices N`` fabricates N host devices (must act before jax imports, so
+pass it on the command line rather than setting it programmatically).
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import os
+import sys
+from typing import Optional
+
+
+def _parse(argv) -> argparse.Namespace:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.experiments",
+        description="Run paper characterization experiments.")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated experiment names or family "
+                         "prefixes (e.g. 'headroom,stressors.suite')")
+    ap.add_argument("--duration", type=float, default=0.25,
+                    help="seconds of timed calls per measurement")
+    ap.add_argument("--format", choices=("csv", "jsonl"), default="csv")
+    ap.add_argument("--out", default=None,
+                    help="write records to FILE instead of stdout")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force N host devices (XLA_FLAGS; set before "
+                         "jax import)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered experiments and exit")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print tracebacks for failing experiments")
+    return ap.parse_args(argv)
+
+
+def main(argv: Optional[list[str]] = None) -> int:
+    args = _parse(argv)
+    if args.devices:
+        if "jax" in sys.modules:
+            print("warning: --devices ignored, jax already imported",
+                  file=sys.stderr)
+        else:
+            os.environ["XLA_FLAGS"] = (
+                os.environ.get("XLA_FLAGS", "") +
+                f" --xla_force_host_platform_device_count={args.devices}")
+
+    from repro.experiments import record as rec
+    from repro.experiments import registry as reg
+    from repro.experiments.runner import Runner
+
+    if args.list:
+        reg.load_builtin()
+        for s in reg.all_experiments():
+            req = f" [>= {s.requires_devices} dev]" \
+                if s.requires_devices > 1 else ""
+            print(f"{s.name:24s} {s.figure:18s}{req} {s.description}")
+        return 0
+
+    only = args.only.split(",") if args.only else None
+    runner = Runner(duration=args.duration, only=only)
+    if not runner.specs:
+        print(f"no experiments match --only {args.only!r}", file=sys.stderr)
+        return 2
+
+    with contextlib.ExitStack() as stack:
+        fh = (stack.enter_context(open(args.out, "w")) if args.out
+              else sys.stdout)
+        if args.format == "csv":
+            import csv
+            w = csv.writer(fh)
+            w.writerow(rec.CSV_FIELDS)
+            emit = lambda r: w.writerow(r.to_csv_row())  # noqa: E731
+        else:
+            emit = lambda r: fh.write(r.to_json() + "\n")  # noqa: E731
+        report = runner.run(emit=emit, verbose=args.verbose)
+        fh.flush()
+
+    n = len(report.records)
+    print(f"[experiments] {n} records, {len(report.skips)} skipped, "
+          f"{len(report.errors)} errors", file=sys.stderr)
+    for r in report.errors:
+        print(f"[experiments] ERROR {r.experiment}: {r.reason}",
+              file=sys.stderr)
+    return 1 if report.errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

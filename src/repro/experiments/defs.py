@@ -1,0 +1,75 @@
+"""Built-in experiment registrations — the paper's figures as registry
+entries.
+
+Each registration is a thin adapter from the shared Runner signature
+(``fn(*, duration)``) to the core characterization modules, with the
+figure presets that used to live in the five ``benchmarks/*_bench.py``
+files.  The core modules already emit ``Record``; nothing here massages
+result shapes.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+from repro.experiments.record import Record
+from repro.experiments.registry import experiment
+
+KB, MB = 1 << 10, 1 << 20
+
+
+@experiment("headroom.transfer_nic", classes=("NETWORK", "MEMORY"),
+            figure="Fig. 1",
+            description="transfer throughput, SmartNIC-like worker budget")
+def _transfer_nic(*, duration: float) -> Iterable[Record]:
+    from repro.core import headroom
+    return headroom.transfer_sweep([4 * KB, 64 * KB, MB], workers=[1, 2],
+                                   duration=duration,
+                                   experiment="headroom.transfer_nic")
+
+
+@experiment("headroom.transfer_host", classes=("NETWORK", "MEMORY"),
+            figure="Fig. 3",
+            description="transfer throughput, host-like worker budget")
+def _transfer_host(*, duration: float) -> Iterable[Record]:
+    from repro.core import headroom
+    return headroom.transfer_sweep([64 * KB, MB], workers=[4, 8],
+                                   duration=duration,
+                                   experiment="headroom.transfer_host")
+
+
+@experiment("headroom.delay_sweep", classes=("NETWORK", "CPU"),
+            figure="Fig. 2/4",
+            description="max injected compute before transfer rate drops")
+def _delay_sweep(*, duration: float) -> Iterable[Record]:
+    from repro.core import headroom
+    return headroom.delay_sweep(MB, [16, 48, 96, 160, 256],
+                                duration=duration)
+
+
+@experiment("stressors.suite", figure="Fig. 7 / Table III",
+            description="stressor battery vs the numpy reference platform")
+def _stressors(*, duration: float) -> Iterable[Record]:
+    from repro.core import stressors
+    return stressors.run_suite(duration=duration)
+
+
+@experiment("classes.aggregate", figure="Fig. 8",
+            description="class-level mean/std of stressor relatives")
+def _classes(*, duration: float) -> Iterable[Record]:
+    from repro.core import classes, stressors
+    return classes.aggregate(stressors.run_suite(duration=duration))
+
+
+@experiment("inpath.collectives", classes=("NETWORK", "CRYPTO"),
+            requires_devices=2, figure="Fig. 5/6",
+            description="in-path int8 transforms inside the all-reduce")
+def _inpath(*, duration: float) -> Iterable[Record]:
+    from repro.core import inpath
+    return inpath.measure(size=1 << 18, duration=duration)
+
+
+@experiment("roofline.table", figure="roofline table",
+            description="three-term roofline of compiled dry-run cells")
+def _roofline(*, duration: float) -> Iterable[Record]:
+    from repro.analysis import report
+    return report.dryrun_records()

@@ -1,0 +1,85 @@
+"""The shared measurement harness.
+
+Every timing loop in the repo goes through ``measure``: the seed grew three
+subtly-different copies (``stressors._timeit``, ``headroom._throughput``,
+the inline loop in ``inpath.measure``), two of which referenced their loop
+variable unbound when the deadline elapsed before the first iteration.
+This one guarantees at least one timed call, synchronizes JAX async
+dispatch once at the end (so throughput is end-to-end, not dispatch rate),
+and reports per-call dispatch quantiles alongside.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable
+
+
+@dataclass(frozen=True)
+class Measurement:
+    calls_per_sec: float      # synchronized: n / (wall time incl. final sync)
+    n: int                    # timed calls (always >= 1, even at duration=0)
+    total_s: float
+    median_s: float           # per-call dispatch-side wall time quantiles,
+    p10_s: float              # over at most the first _MAX_SAMPLES calls
+    p90_s: float
+
+    @property
+    def s_per_call(self) -> float:
+        return 1.0 / self.calls_per_sec if self.calls_per_sec else float("inf")
+
+
+_MAX_SAMPLES = 100_000  # per-call quantiles use at most this many samples
+
+
+def _sync(out) -> None:
+    """Block on JAX async dispatch; harmless for numpy/None results."""
+    try:
+        import jax
+        jax.block_until_ready(out)
+    except Exception:
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+
+
+def measure(fn: Callable[[], object], duration: float = 0.3,
+            warmup: int = 1) -> Measurement:
+    """Call ``fn`` repeatedly for ~``duration`` seconds.
+
+    ``warmup`` un-timed calls absorb jit compilation.  At least one timed
+    call always runs — ``duration=0`` degrades to a single-shot timing
+    rather than an UnboundLocalError (regression-tested).
+    """
+    out = None
+    for _ in range(max(warmup, 0)):
+        out = fn()
+    _sync(out)
+
+    times: list[float] = []
+    n = 0
+    t0 = time.perf_counter()
+    deadline = t0 + duration
+    while True:
+        s = time.perf_counter()
+        out = fn()
+        e = time.perf_counter()
+        n += 1
+        if n <= _MAX_SAMPLES:   # bound memory on nanosecond-scale fns
+            times.append(e - s)
+        if e >= deadline:
+            break
+    _sync(out)
+    total = time.perf_counter() - t0
+
+    times.sort()
+
+    ns = len(times)
+
+    def q(frac: float) -> float:
+        return times[min(ns - 1, round(frac * (ns - 1)))]
+
+    return Measurement(
+        calls_per_sec=n / total if total > 0 else float("inf"),
+        n=n, total_s=total,
+        median_s=q(0.50), p10_s=q(0.10), p90_s=q(0.90),
+    )

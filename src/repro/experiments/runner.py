@@ -1,0 +1,89 @@
+"""The single entry point for running paper characterizations.
+
+The Runner walks selected registry specs, enforces declared requirements
+(SKIP, not crash), stamps wall-clock metadata on every Record, and keeps
+error Records separate so callers can exit nonzero — the seed's
+``benchmarks/run.py`` swallowed exceptions into a CSV row and always
+exited 0.
+"""
+from __future__ import annotations
+
+import time
+import traceback
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Optional
+
+from repro.experiments import record as rec
+from repro.experiments import registry as reg
+from repro.experiments.record import Record
+
+
+@dataclass
+class RunReport:
+    records: list[Record] = field(default_factory=list)
+    errors: list[Record] = field(default_factory=list)   # subset of records
+    skips: list[Record] = field(default_factory=list)    # subset of records
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def by_experiment(self, name: str) -> list[Record]:
+        return [r for r in self.records if r.experiment == name]
+
+
+def _device_count() -> int:
+    try:
+        import jax
+        return len(jax.devices())
+    except Exception:
+        return 0
+
+
+class Runner:
+    """Run registered experiments and emit the unified Record stream."""
+
+    def __init__(self, duration: float = 0.25,
+                 only: Optional[Iterable[str]] = None,
+                 load_builtin: bool = True):
+        if load_builtin:
+            reg.load_builtin()
+        self.duration = duration
+        self.specs = reg.select(only)
+
+    def run(self, emit: Optional[Callable[[Record], None]] = None,
+            verbose: bool = False) -> RunReport:
+        report = RunReport()
+        ndev = _device_count()
+
+        def out(r: Record) -> Record:
+            report.records.append(r)
+            if r.error:
+                report.errors.append(r)
+            if r.skipped:
+                report.skips.append(r)
+            if emit:
+                emit(r)
+            return r
+
+        for spec in self.specs:
+            t0 = time.perf_counter()
+            if ndev < spec.requires_devices:
+                out(rec.skip(spec.name,
+                             f"needs >= {spec.requires_devices} devices, "
+                             f"have {ndev}").stamp(t0))
+                continue
+            try:
+                for r in spec.fn(duration=self.duration):
+                    out(r.stamp(t0))
+            except Exception as e:
+                if verbose:
+                    traceback.print_exc()
+                out(rec.failure(spec.name, e).stamp(t0))
+        return report
+
+
+def run_experiments(duration: float = 0.25,
+                    only: Optional[Iterable[str]] = None) -> RunReport:
+    """One-call convenience wrapper used by examples and benchmarks."""
+    return Runner(duration=duration, only=only).run()

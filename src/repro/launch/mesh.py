@@ -3,11 +3,15 @@
 ``make_production_mesh`` is a FUNCTION (not a module constant) so importing
 this module never touches jax device state.  The dry-run launcher sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
-import to fabricate the placeholder devices.
+import to fabricate the placeholder devices.  Mesh construction goes
+through ``repro.parallel.compat`` so the same code runs on jax versions
+with and without explicit axis types.
 """
 from __future__ import annotations
 
 import jax
+
+from repro.parallel import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -18,19 +22,16 @@ def make_production_mesh(*, multi_pod: bool = False):
     n = math.prod(shape)
     devs = jax.devices()
     if len(devs) == n:
-        return jax.make_mesh(shape, axes,
-                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        return compat.make_mesh(shape, axes)
     # single-pod mesh carved out of the 512 placeholder devices
     assert len(devs) >= n, (len(devs), n)
     grid = np.array(devs[:n]).reshape(shape)
-    return jax.sharding.Mesh(
-        grid, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.mesh_from_devices(grid, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests, CPU-scale examples)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(tuple(shape), tuple(axes))
 
 
 def make_host_mesh(n_data: int = 1, n_model: int = 1):

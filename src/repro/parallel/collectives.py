@@ -23,6 +23,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.parallel import compat
+
 
 # ---------------------------------------------------------------------------
 # int8 (de)quantization — the in-path transform
@@ -58,7 +60,7 @@ def compressed_psum(x: jax.Array, axis_name: str, mean: bool = True):
     Returns (reduced, residual) where ``residual = x - dequant(quant(x))``
     is this device's local quantization error for error feedback.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     chunks, pad = _to_chunks(x, n)                       # (n, c)
     q, s = quantize_int8(chunks)                         # int8 (n,c), (n,1)
     residual = (chunks - dequantize_int8(q, s)).reshape(-1)
@@ -98,7 +100,7 @@ def pairwise_int8_allreduce(x: jax.Array, axis_name: str, mean: bool = True):
     Wire: (n-1) x 1 B/elem vs stock bf16 all-reduce 2(n-1)/n x 2 B/elem —
     a 2x DCN saving at n=2 pods (the production mesh); prefer the chunked
     forms only when n is large AND the payload is pod-manual."""
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     perm = [(i, (i + 1) % n) for i in range(n)]
     xf = x.astype(jnp.float32)
     q, s = quantize_int8(xf)                      # rowwise scales, same shape
@@ -128,7 +130,7 @@ def ring_allreduce(x: jax.Array, axis_name: str, mean: bool = True,
     With ``wire_int8`` every hop carries int8 payloads (per-hop requantize) —
     the deepest in-path-transform variant.  Returns (reduced, residual).
     """
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     me = jax.lax.axis_index(axis_name)
     perm = [(i, (i + 1) % n) for i in range(n)]
     chunks, pad = _to_chunks(x, n)                       # (n, c)

@@ -1,0 +1,65 @@
+"""Version-tolerant wrappers over the mesh / shard_map API surface.
+
+The repo targets current jax (``jax.shard_map`` with ``check_vma``,
+``jax.make_mesh(..., axis_types=...)``); this container ships jax 0.4.x
+(``jax.experimental.shard_map`` with ``check_rep``, no ``AxisType``).
+Routing every callsite through these two helpers keeps the collective
+experiments *running* on both instead of degrading to SKIP rows.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _axis_types_kwargs(n: int) -> dict:
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    return {"axis_types": (axis_type.Auto,) * n} if axis_type else {}
+
+
+def make_mesh(shape, names):
+    """``jax.make_mesh`` with explicit Auto axes where supported (older jax
+    treats every axis as auto implicitly)."""
+    shape, names = tuple(shape), tuple(names)
+    try:
+        return jax.make_mesh(shape, names, **_axis_types_kwargs(len(names)))
+    except TypeError:
+        return jax.make_mesh(shape, names)
+
+
+def mesh_from_devices(device_grid, names):
+    """``jax.sharding.Mesh`` over an explicit device array."""
+    try:
+        return jax.sharding.Mesh(device_grid, tuple(names),
+                                 **_axis_types_kwargs(len(tuple(names))))
+    except TypeError:
+        return jax.sharding.Mesh(device_grid, tuple(names))
+
+
+def axis_size(axis_name: str) -> int:
+    """``jax.lax.axis_size`` where available; the classic ``psum(1, axis)``
+    idiom (statically folded to an int) on older jax."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(fn, mesh, in_specs, out_specs, check: bool = False,
+              axis_names=None):
+    """``jax.shard_map`` / ``jax.experimental.shard_map`` portability.
+
+    ``check`` maps onto ``check_vma`` (new) or ``check_rep`` (old);
+    ``axis_names`` (partial-manual) is honored where the API supports it."""
+    new_sm = getattr(jax, "shard_map", None)
+    if new_sm is not None:
+        kwargs = {"check_vma": check}
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        try:
+            return new_sm(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kwargs)
+        except TypeError:
+            pass
+    from jax.experimental.shard_map import shard_map as old_sm
+    return old_sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check)

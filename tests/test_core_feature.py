@@ -1,10 +1,14 @@
 """The paper's core feature: stressors, class aggregation, headroom sweeps,
-offload planner decisions, analytic roofline."""
-import jax.numpy as jnp
-import pytest
-
+offload planner decisions, analytic roofline — all over the unified
+``Record`` schema."""
 from repro.core import classes, headroom, planner, stressors
-from repro.core.stressors import Result
+from repro.experiments.record import Record
+
+
+def _stressor_record(name, cls, ops, ref, rel, **kw):
+    return Record("stressors.suite", name, "bogo_ops_per_sec", ops,
+                  relative=rel,
+                  params={"classes": list(cls), "ref_ops_per_sec": ref}, **kw)
 
 
 def test_stressor_suite_runs_and_skips_gracefully():
@@ -13,34 +17,49 @@ def test_stressor_suite_runs_and_skips_gracefully():
                                      "quant-int8", "dispatch-noop"])
     by = {r.name: r for r in res}
     assert by["allreduce"].skipped  # single device -> skipped, like rdrand
-    assert not by["vecmath"].skipped and by["vecmath"].bogo_ops_per_sec > 0
+    assert not by["vecmath"].skipped and by["vecmath"].value > 0
     assert by["vecmath"].relative is not None
+    assert all(r.experiment == "stressors.suite" for r in res)
+    assert "CPU" in by["vecmath"].classes
 
 
 def test_class_aggregation_matches_paper_shape():
-    res = [Result("a", ("CPU",), 10, 5, 2.0),
-           Result("b", ("CPU",), 10, 20, 0.5),
-           Result("c", ("MEMORY",), 10, 5, 2.0),
-           Result("d", ("NETWORK",), 0, None, None, skipped=True)]
+    res = [_stressor_record("a", ("CPU",), 10, 5, 2.0),
+           _stressor_record("b", ("CPU",), 10, 20, 0.5),
+           _stressor_record("c", ("MEMORY",), 10, 5, 2.0),
+           _stressor_record("d", ("NETWORK",), None, None, None,
+                            skipped=True)]
     agg = {s.name: s for s in classes.aggregate(res)}
-    assert agg["CPU"].n == 2
-    assert abs(agg["CPU"].mean_relative - 1.25) < 1e-9
+    assert agg["CPU"].params["n"] == 2
+    assert abs(agg["CPU"].value - 1.25) < 1e-9
     assert "NETWORK" not in agg
     rank = classes.ranking(res)
     assert rank[0].relative == 2.0
 
 
+def test_significant_classes_bar():
+    # mean 1.25 with std ~0.75 -> significant; single sample never is
+    res = [_stressor_record("a", ("CPU",), 10, 5, 2.0),
+           _stressor_record("b", ("CPU",), 10, 20, 0.5),
+           _stressor_record("c", ("MEMORY",), 10, 5, 2.0)]
+    agg = classes.aggregate(res)
+    assert classes.significant_classes(agg) == ["CPU"]
+
+
 def test_headroom_delay_sweep_finds_knee():
-    out = headroom.delay_sweep(1 << 16, [8, 64], duration=0.05)
-    assert out["baseline_ops_per_sec"] > 0
-    assert out["rows"][0]["relative"] == 1.0
-    assert out["headroom_s_per_burst"] >= 0
+    recs = headroom.delay_sweep(1 << 16, [8, 64], duration=0.05)
+    summ = headroom.sweep_summary(recs)
+    assert summ["baseline_ops_per_sec"] > 0
+    assert recs[0].relative == 1.0
+    assert summ["headroom_s_per_burst"] >= 0
+    assert all(r.experiment == "headroom.delay_sweep" for r in recs)
 
 
 def test_transfer_sweep_shape():
     rows = headroom.transfer_sweep([4096, 1 << 16], [1, 2], duration=0.03)
     assert len(rows) == 4
-    assert all(r["gbytes_per_sec"] > 0 for r in rows)
+    assert all(r.value > 0 and r.metric == "gbytes_per_sec" for r in rows)
+    assert rows[0].params["workers"] == 1
 
 
 def test_derived_headroom_collective_bound():
@@ -52,7 +71,7 @@ def test_derived_headroom_collective_bound():
 
 
 def test_planner_rules():
-    stress = [Result("quant-int8", ("CRYPTO",), 100, 50, 2.0)]
+    stress = [_stressor_record("quant-int8", ("CRYPTO",), 100, 50, 2.0)]
     # collective-bound -> in-path compression on
     p1 = planner.make_plan(headroom.RooflineTerms(0.01, 0.004, 0.02), stress)
     assert p1.dp_method == "int8_a2a" and p1.use_quant_kernel

@@ -1,0 +1,216 @@
+"""The unified Experiment API: registry round-trip, SKIP semantics,
+Record JSON/CSV emission, the shared measurement harness, and the
+planner consuming a Record stream end-to-end."""
+import io
+
+import pytest
+
+from repro.core import planner
+from repro.core.headroom import RooflineTerms
+from repro.core.inpath import _wire_bytes
+from repro.experiments import (Record, Runner, all_experiments, experiment,
+                               measure, read_csv, read_jsonl, select,
+                               write_csv, write_jsonl)
+from repro.experiments import registry as reg
+from repro.experiments.__main__ import main
+
+
+# ---------------------------------------------------------------------------
+# measurement harness
+# ---------------------------------------------------------------------------
+
+def test_measure_zero_duration_regression():
+    """The seed's _timeit/_throughput loops hit UnboundLocalError when the
+    deadline elapsed before the first iteration; the shared harness must
+    always run at least one timed call."""
+    calls = []
+    m = measure(lambda: calls.append(1), duration=0.0)
+    assert m.n >= 1
+    assert len(calls) >= 2  # warmup + at least one timed call
+    assert m.calls_per_sec > 0
+    assert m.p10_s <= m.median_s <= m.p90_s
+
+
+def test_measure_counts_calls():
+    m = measure(lambda: None, duration=0.02, warmup=0)
+    assert m.n > 1
+    assert m.total_s >= 0.02
+
+
+# ---------------------------------------------------------------------------
+# Record schema + emitters
+# ---------------------------------------------------------------------------
+
+def _sample_records():
+    return [
+        Record("fam.exp", "row1", "ops_per_sec", 123.5, unit="ops/s",
+               relative=1.5, params={"classes": ["CPU"], "size": 4096},
+               wall_time=1e9, elapsed_s=0.1),
+        Record("fam.exp", "row2", "skip", skipped=True, reason="no devices"),
+        Record("fam.other", "row3", "error", error=True, reason="boom"),
+    ]
+
+
+def test_record_jsonl_roundtrip():
+    recs = _sample_records()
+    buf = io.StringIO()
+    write_jsonl(recs, buf)
+    buf.seek(0)
+    back = list(read_jsonl(buf))
+    assert back == recs
+
+
+def test_record_csv_roundtrip():
+    recs = _sample_records()
+    buf = io.StringIO()
+    write_csv(recs, buf)
+    buf.seek(0)
+    back = list(read_csv(buf))
+    assert len(back) == len(recs)
+    assert back[0].value == pytest.approx(123.5)
+    assert back[0].params == {"classes": ["CPU"], "size": 4096}
+    assert back[1].skipped and back[1].reason == "no devices"
+    assert back[2].error
+
+
+# ---------------------------------------------------------------------------
+# registry + SKIP semantics
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def temp_experiment():
+    names = []
+
+    def make(name, fn=None, **kw):
+        fn = fn or (lambda *, duration: [Record(name, "x", "m", 1.0)])
+        experiment(name, **kw)(fn)
+        names.append(name)
+        return name
+
+    yield make
+    for n in names:
+        reg.unregister(n)
+
+
+def test_registry_roundtrip(temp_experiment):
+    name = temp_experiment("zztest.alpha", classes=("CPU",), figure="Fig. 0")
+    spec = reg.get(name)
+    assert spec.name == name and spec.family == "zztest"
+    assert spec.classes == ("CPU",)
+    assert spec in all_experiments()
+    assert [s.name for s in select(["zztest"])] == [name]
+    assert [s.name for s in select([name])] == [name]
+    with pytest.raises(ValueError):
+        experiment(name)(lambda *, duration: [])
+
+
+def test_runner_skips_on_unmet_device_requirement(temp_experiment):
+    name = temp_experiment("zztest.needsmany", requires_devices=99)
+    report = Runner(duration=0.0, only=[name], load_builtin=False).run()
+    assert len(report.records) == 1
+    r = report.records[0]
+    assert r.skipped and not r.error and "99 devices" in r.reason
+    assert report.ok  # SKIP is not an error
+
+
+def test_runner_turns_exceptions_into_error_records(temp_experiment):
+    def boom(*, duration):
+        raise ValueError("broken rig")
+
+    name = temp_experiment("zztest.boom", fn=boom)
+    report = Runner(duration=0.0, only=[name], load_builtin=False).run()
+    assert not report.ok
+    assert report.errors[0].reason == "ValueError: broken rig"
+    assert report.errors[0].experiment == name
+
+
+def test_runner_stamps_wall_clock_metadata(temp_experiment):
+    name = temp_experiment("zztest.stamp")
+    report = Runner(duration=0.0, only=[name], load_builtin=False).run()
+    r = report.records[0]
+    assert r.wall_time is not None and r.elapsed_s is not None
+
+
+def test_builtin_registrations_cover_all_families():
+    reg.load_builtin()
+    fams = {s.family for s in all_experiments()}
+    assert {"headroom", "stressors", "classes", "inpath",
+            "roofline"} <= fams
+    assert reg.get("inpath.collectives").requires_devices == 2
+
+
+def test_inpath_skips_on_single_device():
+    report = Runner(duration=0.0, only=["inpath"]).run()
+    import jax
+    if len(jax.devices()) >= 2:
+        pytest.skip("multi-device backend; inpath actually runs")
+    assert report.records[0].skipped
+    assert report.ok
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_jsonl_out_and_exit_code(tmp_path):
+    out = tmp_path / "records.jsonl"
+    rc = main(["--only", "headroom.transfer_nic", "--duration", "0.01",
+               "--format", "jsonl", "--out", str(out)])
+    assert rc == 0
+    recs = list(read_jsonl(open(out)))
+    assert len(recs) == 6  # 3 message sizes x 2 worker counts
+    assert all(r.experiment == "headroom.transfer_nic" for r in recs)
+    assert all(r.wall_time is not None for r in recs)
+
+
+def test_cli_rejects_unknown_selection():
+    assert main(["--only", "no.such.experiment"]) == 2
+
+
+def test_cli_nonzero_on_error(tmp_path, temp_experiment):
+    def boom(*, duration):
+        raise RuntimeError("rig fell over")
+
+    name = temp_experiment("zztest.clifail", fn=boom)
+    out = tmp_path / "r.csv"
+    rc = main(["--only", name, "--duration", "0.0", "--out", str(out)])
+    assert rc == 1
+
+
+# ---------------------------------------------------------------------------
+# wire-byte model (satellite: int8_a2a scale accounting)
+# ---------------------------------------------------------------------------
+
+def test_wire_bytes_int8_a2a_models_per_block_scales():
+    n, size = 4, 1 << 20
+    a2a = _wire_bytes(n, size, "int8_a2a")
+    # int8 payload + one fp32 scale per chunk block, both exchange phases
+    assert a2a == int(2 * (n - 1) / n * (size + n * 4))
+    # the seed's formula collapsed the scale term to a constant 4 bytes;
+    # the fixed model scales with payload size
+    assert _wire_bytes(n, 2 * size, "int8_a2a") == pytest.approx(
+        2 * a2a, rel=1e-3)
+    # compression still wins vs fp32 wire
+    assert a2a < _wire_bytes(n, size, "stock") / 3.9
+    ring = _wire_bytes(n, size, "int8_ring")
+    assert ring == int(2 * (n - 1) / n * size + 2 * (n - 1) * 4)
+
+
+# ---------------------------------------------------------------------------
+# planner consumes the Record stream end-to-end (through JSONL)
+# ---------------------------------------------------------------------------
+
+def test_make_plan_from_record_stream_end_to_end():
+    from repro.core import stressors
+    recs = stressors.run_suite(duration=0.02,
+                               names=["quant-int8", "vecmath", "allreduce"])
+    buf = io.StringIO()
+    write_jsonl(recs, buf)
+    buf.seek(0)
+    back = list(read_jsonl(buf))
+
+    plan = planner.make_plan(RooflineTerms(0.01, 0.004, 0.02), back)
+    assert plan.dp_method == "int8_a2a"  # collective-bound with headroom
+    assert plan.ranking  # populated from the (non-skipped) records
+    names = [n for n, _ in plan.ranking]
+    assert "allreduce" not in names  # skipped records never ranked
