@@ -1,0 +1,71 @@
+#!/usr/bin/env python
+"""Fail if README.md references a CLI flag the experiments CLI doesn't list.
+
+Run from the repo root (CI does):
+
+    PYTHONPATH=src python scripts/check_readme_cli.py
+
+Every ``--flag`` token that appears in README.md inside a
+``python -m repro.experiments`` context must appear in
+``python -m repro.experiments --help``; a flag renamed or removed in the
+CLI without a README update is a documentation regression, caught here
+rather than by a confused user.  Flags README mentions for *other* tools
+(pytest, XLA) are out of scope — the scan is restricted to lines/blocks
+that mention the experiments CLI or its flags table.
+"""
+from __future__ import annotations
+
+import re
+import subprocess
+import sys
+
+
+def readme_cli_flags(text: str) -> set[str]:
+    """``--flag`` tokens in experiments-CLI context within README.md."""
+    flags: set[str] = set()
+    in_cli_section = False
+    in_fence = False
+    for line in text.splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+        # a leading '#' inside a code fence is a shell comment, not a heading
+        if line.startswith("#") and not in_fence:
+            in_cli_section = "repro.experiments" in line
+        relevant = in_cli_section or "repro.experiments" in line \
+            or line.lstrip().startswith("| `--")
+        if relevant:
+            # underscore included so an underscore flag can't be collected
+            # as a truncated prefix; --xla* are XLA env flags that share
+            # command lines with the CLI, never CLI flags themselves
+            flags.update(f for f in re.findall(r"--[a-z][a-z0-9_-]*", line)
+                         if not f.startswith("--xla"))
+    return flags
+
+
+def main() -> int:
+    with open("README.md") as f:
+        readme = f.read()
+    wanted = readme_cli_flags(readme)
+    if not wanted:
+        print("check_readme_cli: no experiments-CLI flags found in "
+              "README.md — scan is broken", file=sys.stderr)
+        return 1
+    help_text = subprocess.run(
+        [sys.executable, "-m", "repro.experiments", "--help"],
+        capture_output=True, text=True, check=True).stdout
+    listed = set(re.findall(r"--[a-z][a-z0-9_-]*", help_text))
+    missing = sorted(wanted - listed)
+    if missing:
+        print("README.md references experiments-CLI flags that "
+              "`python -m repro.experiments --help` does not list:",
+              file=sys.stderr)
+        for flag in missing:
+            print(f"  {flag}", file=sys.stderr)
+        return 1
+    print(f"check_readme_cli: {len(wanted)} README flags all present "
+          "in --help")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -37,8 +37,11 @@ def _wire_bytes(n: int, size: int, method: str) -> int:
 
     Compressed methods ship 1 B/element payload plus one fp32 scale per
     block: ``int8_a2a`` quantizes per chunk row (n blocks of size/n
-    elements, see ``collectives.compressed_psum``), ``int8_ring``
-    requantizes per hop (one block per hop)."""
+    elements, see ``collectives.compressed_psum``) in both exchange phases;
+    ``int8_ring`` requantizes per reduce-scatter hop (one chunk + scale per
+    hop) but its all-gather phase is fp32 — ``collectives.ring_allreduce``
+    gathers the reduced chunks with a plain ``all_gather`` of the fp32
+    accumulator, so that phase costs 4 B/element on the wire."""
     full = size * 4
     if method == "stock":
         return int(2 * (n - 1) / n * full)          # ring all-reduce, fp32
@@ -48,8 +51,9 @@ def _wire_bytes(n: int, size: int, method: str) -> int:
         # n chunk-blocks, each int8 payload + fp32 scale, both phases
         return int(2 * (n - 1) / n * (size + n * SCALE_BYTES))
     if method == "int8_ring":
-        # int8 on every hop; each hop carries one chunk + its scale
-        return int(2 * (n - 1) / n * size + 2 * (n - 1) * SCALE_BYTES)
+        # reduce-scatter: int8 chunk + fp32 scale per hop; all-gather: fp32
+        return int((n - 1) / n * size + (n - 1) * SCALE_BYTES
+                   + (n - 1) / n * full)
     raise ValueError(method)
 
 

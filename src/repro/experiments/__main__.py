@@ -2,12 +2,16 @@
 
     PYTHONPATH=src python -m repro.experiments [--only headroom,stressors]
         [--duration 0.25] [--format csv|jsonl] [--out FILE] [--devices N]
-        [--list]
+        [--records-dir DIR | --no-records] [--list]
+    PYTHONPATH=src python -m repro.experiments diff old.jsonl new.jsonl
 
 Exit status is nonzero when any experiment errors (SKIPs are not errors) —
 the seed's ``benchmarks/run.py`` swallowed exceptions and always exited 0.
 ``--devices N`` fabricates N host devices (must act before jax imports, so
 pass it on the command line rather than setting it programmatically).
+Every run also persists its Record stream as JSONL under
+``experiments/records/`` (``--records-dir`` moves it, ``--no-records``
+turns it off); ``diff`` compares two persisted streams per experiment.
 """
 from __future__ import annotations
 
@@ -21,7 +25,9 @@ from typing import Optional
 def _parse(argv) -> argparse.Namespace:
     ap = argparse.ArgumentParser(
         prog="python -m repro.experiments",
-        description="Run paper characterization experiments.")
+        description="Run paper characterization experiments.",
+        epilog="subcommand: 'diff OLD.jsonl NEW.jsonl' compares two "
+               "persisted Record streams per experiment.")
     ap.add_argument("--only", default=None,
                     help="comma-separated experiment names or family "
                          "prefixes (e.g. 'headroom,stressors.suite')")
@@ -33,6 +39,12 @@ def _parse(argv) -> argparse.Namespace:
     ap.add_argument("--devices", type=int, default=None,
                     help="force N host devices (XLA_FLAGS; set before "
                          "jax import)")
+    recs = ap.add_mutually_exclusive_group()
+    recs.add_argument("--records-dir", default=None, metavar="DIR",
+                      help="directory for the persisted per-run JSONL Record "
+                           "stream (default: experiments/records)")
+    recs.add_argument("--no-records", action="store_true",
+                      help="do not persist the per-run Record stream")
     ap.add_argument("--list", action="store_true",
                     help="list registered experiments and exit")
     ap.add_argument("--verbose", action="store_true",
@@ -41,6 +53,10 @@ def _parse(argv) -> argparse.Namespace:
 
 
 def main(argv: Optional[list[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "diff":
+        from repro.experiments.diff import main as diff_main
+        return diff_main(argv[1:])
     args = _parse(argv)
     if args.devices:
         if "jax" in sys.modules:
@@ -63,28 +79,41 @@ def main(argv: Optional[list[str]] = None) -> int:
             print(f"{s.name:24s} {s.figure:18s}{req} {s.description}")
         return 0
 
+    from repro.experiments.runner import DEFAULT_RECORDS_DIR
+    records_dir = (None if args.no_records
+                   else args.records_dir or DEFAULT_RECORDS_DIR)
     only = args.only.split(",") if args.only else None
-    runner = Runner(duration=args.duration, only=only)
+    runner = Runner(duration=args.duration, only=only,
+                    records_dir=records_dir)
     if not runner.specs:
         print(f"no experiments match --only {args.only!r}", file=sys.stderr)
         return 2
 
-    with contextlib.ExitStack() as stack:
-        fh = (stack.enter_context(open(args.out, "w")) if args.out
-              else sys.stdout)
-        if args.format == "csv":
-            import csv
-            w = csv.writer(fh)
-            w.writerow(rec.CSV_FIELDS)
-            emit = lambda r: w.writerow(r.to_csv_row())  # noqa: E731
-        else:
-            emit = lambda r: fh.write(r.to_json() + "\n")  # noqa: E731
-        report = runner.run(emit=emit, verbose=args.verbose)
-        fh.flush()
+    try:
+        with contextlib.ExitStack() as stack:
+            fh = (stack.enter_context(open(args.out, "w")) if args.out
+                  else sys.stdout)
+            if args.format == "csv":
+                import csv
+                w = csv.writer(fh)
+                w.writerow(rec.CSV_FIELDS)
+                emit = lambda r: w.writerow(r.to_csv_row())  # noqa: E731
+            else:
+                emit = lambda r: fh.write(r.to_json() + "\n")  # noqa: E731
+            report = runner.run(emit=emit, verbose=args.verbose)
+            fh.flush()
+    except BrokenPipeError:
+        # stdout consumer closed early (`... | head`): truncation was asked
+        # for, not an error; detach stdout so the interpreter exits quietly
+        os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+        return 0
 
     n = len(report.records)
     print(f"[experiments] {n} records, {len(report.skips)} skipped, "
           f"{len(report.errors)} errors", file=sys.stderr)
+    if report.records_path:
+        print(f"[experiments] record stream: {report.records_path}",
+              file=sys.stderr)
     for r in report.errors:
         print(f"[experiments] ERROR {r.experiment}: {r.reason}",
               file=sys.stderr)

@@ -1,0 +1,106 @@
+"""Diff two persisted Record streams (JSONL), per experiment.
+
+    PYTHONPATH=src python -m repro.experiments diff old.jsonl new.jsonl
+
+The first step of the regression-diff direction in ROADMAP.md: Runner
+persists one JSONL stream per run under ``experiments/records/``; this
+command compares two of them row by row.  Rows are keyed by
+``(experiment, name, metric)``; for keys present in both streams with
+numeric values the absolute and relative delta is printed, and rows only
+in one stream are reported as added/removed.  SKIP/ERROR flag changes are
+called out explicitly (a row silently flipping to skipped is how coverage
+regressions hide).
+
+This is a *report*, not a gate: exit status is 0 whenever both files
+parse.  Thresholding deltas into failures needs a noise model per metric
+(wall-clock metrics on shared CI runners jitter far more than wire-byte
+models) and is left to the consumer.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import sys
+from typing import Callable, Iterable
+
+from repro.experiments.record import Record, read_jsonl
+
+Key = tuple  # (experiment, name, metric)
+
+
+def _index(records: Iterable[Record]) -> dict[Key, Record]:
+    out: dict[Key, Record] = {}
+    for r in records:   # last row wins for a repeated key
+        out[(r.experiment, r.name, r.metric)] = r
+    return out
+
+
+def _fmt_val(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def _delta_line(name: str, metric: str, old: Record, new: Record) -> str:
+    head = f"  {name}.{metric}: "
+    flags = []
+    if old.skipped != new.skipped:
+        flags.append(f"skipped {old.skipped} -> {new.skipped}")
+    if old.error != new.error:
+        flags.append(f"error {old.error} -> {new.error}")
+    if flags:
+        return head + ", ".join(flags)
+    ov, nv = old.value, new.value
+    if isinstance(ov, (int, float)) and isinstance(nv, (int, float)):
+        if ov == nv:
+            return ""
+        rel = f" ({(nv - ov) / ov:+.1%})" if ov else ""
+        return head + f"{_fmt_val(ov)} -> {_fmt_val(nv)}{rel}"
+    if ov != nv:
+        return head + f"{_fmt_val(ov)} -> {_fmt_val(nv)}"
+    return ""
+
+
+def diff_streams(old: Iterable[Record], new: Iterable[Record],
+                 out: Callable[[str], None] = print) -> int:
+    """Print per-experiment deltas; returns the number of changed rows."""
+    oidx, nidx = _index(old), _index(new)
+    changed = 0
+    all_keys = sorted(set(oidx) | set(nidx))   # sorts by experiment first
+    for exp, group in itertools.groupby(all_keys, key=lambda k: k[0]):
+        lines = []
+        for k in group:
+            _, name, metric = k
+            if k not in oidx:
+                lines.append(f"  {name}.{metric}: added "
+                             f"({_fmt_val(nidx[k].value)})")
+            elif k not in nidx:
+                lines.append(f"  {name}.{metric}: removed "
+                             f"(was {_fmt_val(oidx[k].value)})")
+            else:
+                line = _delta_line(name, metric, oidx[k], nidx[k])
+                if line:
+                    lines.append(line)
+        if lines:
+            out(f"{exp}:")
+            for line in lines:
+                out(line)
+            changed += len(lines)
+    if not changed:
+        out("no per-experiment deltas")
+    return changed
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) != 2:
+        print("usage: python -m repro.experiments diff OLD.jsonl NEW.jsonl",
+              file=sys.stderr)
+        return 2
+    try:
+        with open(argv[0]) as fo, open(argv[1]) as fn:
+            diff_streams(read_jsonl(fo), read_jsonl(fn))
+    except BrokenPipeError:
+        # downstream closed early (`diff ... | head`): not an error, but
+        # stdout must be detached or the interpreter tracebacks on exit
+        os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+    return 0

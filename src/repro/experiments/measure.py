@@ -7,6 +7,14 @@ variable unbound when the deadline elapsed before the first iteration.
 This one guarantees at least one timed call, synchronizes JAX async
 dispatch once at the end (so throughput is end-to-end, not dispatch rate),
 and reports per-call dispatch quantiles alongside.
+
+``measure(fn, duration, warmup)`` returns a ``Measurement``:
+``calls_per_sec`` (synchronized end-to-end rate — the number Records
+usually carry as ``value``), ``n`` timed calls, ``total_s`` wall time,
+and ``median_s``/``p10_s``/``p90_s`` per-call *dispatch-side* quantiles
+(they exclude the final sync, so on an async backend they bound dispatch
+cost, not device time).  Experiments put the rate or ``s_per_call`` in
+``Record.value`` and stash quantiles in ``Record.params``.
 """
 from __future__ import annotations
 

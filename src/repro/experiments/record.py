@@ -6,6 +6,37 @@ Replaces the per-module result types the seed grew (``stressors.Result``,
 ``inpath.InPathResult``, ``classes.ClassSummary``, and the ad-hoc
 ``name,metric,value`` tuples in ``benchmarks/``).
 
+Schema (one ``Record``):
+
+  ``experiment``   registry name of the owning experiment, dotted
+                   ``family.variant`` (e.g. ``"stressors.suite"``).
+  ``name``         row within the experiment (e.g. ``"quant-int8"``,
+                   a message size, a roofline cell); ``"-"`` for
+                   experiment-level SKIP/ERROR rows.
+  ``metric``       what was measured (``"bogo_ops_per_sec"``,
+                   ``"wall_s_per_call"``); ``"skip"``/``"error"`` for
+                   status rows.
+  ``value``        the measurement: float/int/str, or None on status rows.
+  ``unit``         unit string for ``value`` (``"s"``, ``"ops/s"``, "").
+  ``relative``     ``value`` normalized against the experiment's declared
+                   reference — the paper's RPi4-reference idiom (stock
+                   collective, numpy platform); reference rows carry 1.0.
+  ``params``       experiment-specific inputs and side measurements
+                   (classes, message sizes, wire bytes, error bounds);
+                   must stay JSON-serializable.
+  ``skipped``      True for a stress-ng-style SKIP: a *declared*
+                   capability was missing (device count, backend), the
+                   experiment was not attempted.  Never an error.
+  ``reason``       human-readable SKIP/ERROR explanation.
+  ``error``        True when an exception escaped the experiment; the
+                   Runner records it and the CLI exits nonzero.
+  ``wall_time``    unix timestamp when the row was measured.
+  ``elapsed_s``    seconds since the owning experiment started (shared
+                   across an experiment's rows).
+
+SKIP and ERROR are disjoint by construction (``skip()`` / ``failure()``
+below); consumers rank/aggregate only rows with neither flag set.
+
 Emitters: ``write_jsonl`` / ``read_jsonl`` round-trip losslessly;
 ``write_csv`` flattens ``params`` into a JSON-encoded column for
 spreadsheet use.

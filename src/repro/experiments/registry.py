@@ -7,6 +7,15 @@ generalizes the stress-ng SKIP semantics the seed implemented ad hoc in
 ``stressors.run_suite``: an experiment whose requirements are unmet yields
 a single skipped Record instead of raising.
 
+SKIP semantics, precisely: ``requires_devices`` is checked by the Runner
+*before* the experiment runs; unmet means one ``Record(skipped=True)``
+with the shortfall in ``reason`` and the experiment is never called (the
+paper's rdrand-on-ARM case).  An experiment may also yield its own skip
+rows for per-row capability gaps (e.g. one stressor of a suite needing a
+missing backend).  SKIPs never fail a run; exceptions *escaping* ``fn``
+become ``Record(error=True)`` rows and do — declared-unmet is a SKIP,
+unexpected-broken is an ERROR.
+
     @experiment("headroom.delay_sweep", classes=("NETWORK",), figure="2/4")
     def delay(*, duration: float):
         yield Record(...)

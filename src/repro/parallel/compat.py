@@ -1,46 +1,107 @@
-"""Version-tolerant wrappers over the mesh / shard_map API surface.
+"""Version-tolerant wrappers over the mesh / sharding / shard_map surface.
 
-The repo targets current jax (``jax.shard_map`` with ``check_vma``,
-``jax.make_mesh(..., axis_types=...)``); this container ships jax 0.4.x
-(``jax.experimental.shard_map`` with ``check_rep``, no ``AxisType``).
-Routing every callsite through these two helpers keeps the collective
-experiments *running* on both instead of degrading to SKIP rows.
+The repo targets current jax (``jax.shard_map`` with ``check_vma`` and
+``axis_names``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.sharding.get_abstract_mesh``); this container ships jax 0.4.x
+(``jax.experimental.shard_map`` with ``check_rep`` and ``auto``, no
+``AxisType``, no abstract-mesh accessor).  Routing every callsite through
+this module keeps the full stack — train step, serve step, checkpoint,
+collectives, experiments — *running* on both instead of degrading to SKIP
+rows or AttributeErrors.
+
+Policy (see DESIGN.md section 7): **one version gate**, ``IS_NEW_JAX``,
+computed once below.  Every shim dispatches on it with a plain ``if``; no
+callsite outside this file may probe the jax version (``hasattr`` on jax
+modules, ``jax.__version__`` compares, try/except-TypeError feature
+sniffing).  To add a shim: write the new-jax call in the ``IS_NEW_JAX``
+branch, the 0.4.x equivalent in the other, and port callsites to it.
 """
 from __future__ import annotations
 
 import jax
 
-
-def _axis_types_kwargs(n: int) -> dict:
-    axis_type = getattr(jax.sharding, "AxisType", None)
-    return {"axis_types": (axis_type.Auto,) * n} if axis_type else {}
+# The single version gate: ``jax.shard_map`` was promoted out of
+# jax.experimental in the same release family that introduced
+# ``AxisType`` / abstract meshes, so its presence separates the two API
+# generations this repo supports.
+IS_NEW_JAX: bool = hasattr(jax, "shard_map")
 
 
 def make_mesh(shape, names):
     """``jax.make_mesh`` with explicit Auto axes where supported (older jax
     treats every axis as auto implicitly)."""
     shape, names = tuple(shape), tuple(names)
-    try:
-        return jax.make_mesh(shape, names, **_axis_types_kwargs(len(names)))
-    except TypeError:
-        return jax.make_mesh(shape, names)
+    if IS_NEW_JAX:
+        return jax.make_mesh(
+            shape, names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(names))
+    return jax.make_mesh(shape, names)
 
 
 def mesh_from_devices(device_grid, names):
     """``jax.sharding.Mesh`` over an explicit device array."""
-    try:
-        return jax.sharding.Mesh(device_grid, tuple(names),
-                                 **_axis_types_kwargs(len(tuple(names))))
-    except TypeError:
-        return jax.sharding.Mesh(device_grid, tuple(names))
+    names = tuple(names)
+    if IS_NEW_JAX:
+        return jax.sharding.Mesh(
+            device_grid, names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(names))
+    return jax.sharding.Mesh(device_grid, names)
+
+
+def named_sharding(mesh, spec) -> jax.sharding.NamedSharding:
+    """``NamedSharding`` construction.
+
+    Identical on both generations today; centralized so sharding
+    construction has one door when the API next moves (and so callsites
+    build shardings without importing jax.sharding directly)."""
+    return jax.sharding.NamedSharding(mesh, spec)
+
+
+def get_abstract_mesh():
+    """The ambient abstract mesh (set inside jit/shard_map tracing) on new
+    jax; ``None`` on 0.4.x, which has no accessor — callers must treat
+    ``None`` as "no ambient mesh" and fall back to their concrete mesh."""
+    if IS_NEW_JAX:
+        return jax.sharding.get_abstract_mesh()
+    return None
+
+
+def pcast_varying(x, axis_name: str):
+    """Mark ``x`` as varying over a manual axis (``jax.lax.pcast`` with
+    ``to="varying"``).  New jax tracks varying-manual-axes (VMA) through
+    shard_map and requires e.g. a scan carry fed by ppermute to start out
+    varying; 0.4.x has no VMA tracking (``check_rep=False``), so this is
+    the identity there."""
+    if IS_NEW_JAX:
+        return jax.lax.pcast(x, (axis_name,), to="varying")
+    return x
+
+
+def psum_replicated(x, axis_name: str):
+    """``psum`` of a device-varying value into one replicated logical value,
+    with the *new-jax* transpose: the backward pass is the identity (each
+    local contribution appears exactly once in the logical sum).
+
+    On 0.4.x a plain ``psum`` transposes to ``psum`` even under
+    ``check_rep=True``, so differentiating a replicate-by-psum (the pipeline
+    loss broadcast idiom) overcounts gradients by the axis size; a
+    custom_vjp restores the identity transpose there."""
+    if IS_NEW_JAX:
+        return jax.lax.psum(x, axis_name)
+
+    @jax.custom_vjp
+    def _psum(v):
+        return jax.lax.psum(v, axis_name)
+
+    _psum.defvjp(lambda v: (_psum(v), None), lambda _, ct: (ct,))
+    return _psum(x)
 
 
 def axis_size(axis_name: str) -> int:
     """``jax.lax.axis_size`` where available; the classic ``psum(1, axis)``
     idiom (statically folded to an int) on older jax."""
-    fn = getattr(jax.lax, "axis_size", None)
-    if fn is not None:
-        return fn(axis_name)
+    if IS_NEW_JAX:
+        return jax.lax.axis_size(axis_name)
     return jax.lax.psum(1, axis_name)
 
 
@@ -48,18 +109,19 @@ def shard_map(fn, mesh, in_specs, out_specs, check: bool = False,
               axis_names=None):
     """``jax.shard_map`` / ``jax.experimental.shard_map`` portability.
 
-    ``check`` maps onto ``check_vma`` (new) or ``check_rep`` (old);
-    ``axis_names`` (partial-manual) is honored where the API supports it."""
-    new_sm = getattr(jax, "shard_map", None)
-    if new_sm is not None:
+    ``check`` maps onto ``check_vma`` (new) or ``check_rep`` (old).
+    ``axis_names`` is the *manual* axis set (new-jax convention);
+    ``None`` means manual over every mesh axis.  On 0.4.x it is translated
+    to the complementary ``auto`` set (partial-auto mode requires
+    ``check_rep=False``, which is forced there)."""
+    if IS_NEW_JAX:
         kwargs = {"check_vma": check}
         if axis_names is not None:
-            kwargs["axis_names"] = axis_names
-        try:
-            return new_sm(fn, mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs, **kwargs)
-        except TypeError:
-            pass
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
     from jax.experimental.shard_map import shard_map as old_sm
+    auto = (frozenset(mesh.axis_names) - frozenset(axis_names)
+            if axis_names is not None else frozenset())
     return old_sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                  check_rep=check)
+                  check_rep=False if auto else check, auto=auto)

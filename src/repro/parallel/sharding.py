@@ -21,7 +21,9 @@ from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.parallel import compat
 
 
 # mesh axes that a logical axis maps to (a tuple means "shard over both")
@@ -141,9 +143,12 @@ def best_spec(shape: Sequence[int], candidates: Sequence[Sequence[Optional[str]]
 
 def _current_mesh(ctx: ShardingCtx):
     """Inside shard_map the ambient abstract mesh (with Manual axes) must be
-    used for constraints; otherwise the ctx's concrete mesh."""
-    am = jax.sharding.get_abstract_mesh()
-    if not am.empty and set(am.axis_names) == set(ctx.mesh.axis_names):
+    used for constraints; otherwise the ctx's concrete mesh.  Old jax has no
+    abstract-mesh accessor (compat returns None) — constraints there always
+    target the concrete mesh."""
+    am = compat.get_abstract_mesh()
+    if am is not None and not am.empty \
+            and set(am.axis_names) == set(ctx.mesh.axis_names):
         return am
     return ctx.mesh
 
@@ -155,7 +160,7 @@ def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
         return x
     spec = safe_spec(x.shape, logical, ctx)
     return jax.lax.with_sharding_constraint(
-        x, NamedSharding(_current_mesh(ctx), spec))
+        x, compat.named_sharding(_current_mesh(ctx), spec))
 
 
 def constrain_best(x: jax.Array, candidates: Sequence[Sequence[Optional[str]]]) -> jax.Array:
@@ -164,7 +169,7 @@ def constrain_best(x: jax.Array, candidates: Sequence[Sequence[Optional[str]]]) 
         return x
     spec = best_spec(x.shape, candidates, ctx)
     return jax.lax.with_sharding_constraint(
-        x, NamedSharding(_current_mesh(ctx), spec))
+        x, compat.named_sharding(_current_mesh(ctx), spec))
 
 
 # ---------------------------------------------------------------------------
@@ -254,6 +259,6 @@ def param_specs(params_shape_tree, ctx: ShardingCtx):
 
 def param_shardings(params_shape_tree, ctx: ShardingCtx):
     return jax.tree_util.tree_map(
-        lambda spec: NamedSharding(ctx.mesh, spec),
+        lambda spec: compat.named_sharding(ctx.mesh, spec),
         param_specs(params_shape_tree, ctx),
         is_leaf=lambda x: isinstance(x, P))

@@ -8,11 +8,11 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import registry
-from repro.parallel import sharding
+from repro.parallel import compat, sharding
 
 
 def _ctx_for(mesh, shape: ShapeConfig):
@@ -64,7 +64,7 @@ def cache_shardings(cache_shape, ctx: sharding.ShardingCtx):
                 return sharding.safe_spec(leaf.shape, (None,) + logical, ctx)
         return P()
     return jax.tree_util.tree_map_with_path(
-        lambda path, leaf: NamedSharding(ctx.mesh, spec(path, leaf)),
+        lambda path, leaf: compat.named_sharding(ctx.mesh, spec(path, leaf)),
         cache_shape)
 
 
@@ -79,7 +79,7 @@ def jit_decode_step(cfg: ArchConfig, shape: ShapeConfig, mesh):
     bspec = {}
     for k, v in registry.input_specs(cfg, shape).items():
         logical = ("batch",) + (None,) * (len(v.shape) - 1)
-        bspec[k] = NamedSharding(
+        bspec[k] = compat.named_sharding(
             ctx.mesh, sharding.safe_spec(v.shape, logical, ctx) if v.shape
             else P())
     jitted = jax.jit(step, in_shardings=(pspec, cspec, bspec),
@@ -94,6 +94,7 @@ def jit_prefill_step(cfg: ArchConfig, shape: ShapeConfig, mesh):
     bspec = {}
     for k, v in registry.input_specs(cfg, shape).items():
         logical = ("batch",) + (None,) * (len(v.shape) - 1)
-        bspec[k] = NamedSharding(ctx.mesh, sharding.safe_spec(v.shape, logical, ctx))
+        bspec[k] = compat.named_sharding(
+            ctx.mesh, sharding.safe_spec(v.shape, logical, ctx))
     jitted = jax.jit(step, in_shardings=(pspec, bspec))
     return jitted, ctx, params_shape

@@ -16,11 +16,11 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import registry
-from repro.parallel import collectives, sharding
+from repro.parallel import collectives, compat, sharding
 from repro.train import optimizer as opt
 
 LB_WEIGHT = 0.01
@@ -90,7 +90,8 @@ def batch_shardings(batch_spec: dict, ctx: sharding.ShardingCtx):
     out = {}
     for k, v in batch_spec.items():
         logical = ("batch",) + (None,) * (len(v.shape) - 1)
-        out[k] = NamedSharding(ctx.mesh, sharding.safe_spec(v.shape, logical, ctx))
+        out[k] = compat.named_sharding(
+            ctx.mesh, sharding.safe_spec(v.shape, logical, ctx))
     return out
 
 
@@ -172,14 +173,14 @@ def make_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
     def step(state, batch):
         batch_specs = jax.tree_util.tree_map(
             lambda v: P("pod") if v.ndim else P(), batch)
-        return jax.shard_map(
+        return compat.shard_map(
             inner, mesh=mesh,
             in_specs=(jax.tree_util.tree_map(lambda _: P(), state),
                       batch_specs),
             out_specs=(jax.tree_util.tree_map(lambda _: P(), state),
                        jax.tree_util.tree_map(lambda _: P(),
                                               _metric_proto(options))),
-            axis_names={"pod"}, check_vma=False)(state, batch)
+            axis_names={"pod"}, check=False)(state, batch)
 
     return step, ctx
 

@@ -27,8 +27,8 @@ assert r2.flops == 6 * G * B * D * D, r2.flops          # fwd+bwd exact
 
 # sharded: global dot flops must be conserved, collectives trip-counted
 from jax.sharding import PartitionSpec as P, NamedSharding
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.parallel import compat
+mesh = compat.make_mesh((2, 4), ("data", "model"))
 f = jax.jit(fwd, in_shardings=(NamedSharding(mesh, P(None, None, "model")),
                                NamedSharding(mesh, P("data", None))))
 c3 = f.lower(ws, x).compile()

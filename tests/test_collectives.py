@@ -14,16 +14,19 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.launch.mesh import make_mesh
-from repro.parallel import collectives as C, pipeline as PP
+from repro.parallel import collectives as C, compat, pipeline as PP
 
 mesh = make_mesh((4, 2), ("pod", "data"))
 x = jax.random.normal(jax.random.key(0), (4, 1000))
 want = jnp.mean(x, axis=0)
 
+# fully manual over the mesh: nothing is sharded over "data" here, and the
+# partial-manual form (axis_names={"pod"}) needs an SPMD pass that rejects
+# the axis_index -> partition-id lowering on the jax-0.4.x CPU backend.
 def run(fn):
-    f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P("pod", None),
-                              out_specs=(P("pod", None), P("pod", None)),
-                              axis_names={"pod"}, check_vma=False))
+    f = jax.jit(compat.shard_map(fn, mesh=mesh, in_specs=P("pod", None),
+                                 out_specs=(P("pod", None), P("pod", None)),
+                                 check=False))
     out, res = f(x)
     return float(jnp.max(jnp.abs(out - want[None])))
 
@@ -34,10 +37,10 @@ assert run(lambda g: C.ring_allreduce(g, "pod", wire_int8=True)) < 0.05
 # error feedback: compressed reduce with feedback converges to exact mean
 g = jax.random.normal(jax.random.key(1), (4, 4096))
 errs = jnp.zeros_like(g)
-f = jax.jit(jax.shard_map(
+f = jax.jit(compat.shard_map(
     lambda g, e: C.compressed_psum(g + e, "pod"), mesh=mesh,
     in_specs=(P("pod"), P("pod")), out_specs=(P("pod"), P("pod")),
-    axis_names={"pod"}, check_vma=False))
+    check=False))
 # accumulated average of compressed reductions approaches the true mean
 acc = jnp.zeros((1, 4096))
 for i in range(20):
@@ -53,9 +56,13 @@ ws = jax.random.normal(jax.random.key(1), (4, D, D)) * 0.5
 mbs = jax.random.normal(jax.random.key(2), (NM, MB, D))
 stage_fn = lambda w, x: jnp.tanh(x @ w)
 app = PP.pipeline(stage_fn, 4)
-f = jax.jit(jax.shard_map(lambda w, m: app(w, m), mesh=mesh2,
-                          in_specs=(P("stage", None, None), P(None)),
-                          out_specs=P(None), axis_names={"stage"}))
+# check=True here: replication checking is what makes psum transpose to the
+# identity under jax.grad — without it the old-jax backward overcounts by
+# n_stages (psum transposes to psum against a replicated cotangent).
+f = jax.jit(compat.shard_map(lambda w, m: app(w, m), mesh=mesh2,
+                             in_specs=(P("stage", None, None), P(None)),
+                             out_specs=P(None), axis_names={"stage"},
+                             check=True))
 got = f(ws, mbs)
 want2 = mbs
 for s in range(4):
@@ -64,10 +71,10 @@ assert jnp.allclose(got, want2, atol=1e-5), "pipeline forward mismatch"
 
 lf = PP.pipelined_loss(stage_fn, lambda o, t: jnp.mean((o - t) ** 2), 4)
 tgt = jnp.zeros_like(mbs)
-gr = jax.jit(jax.shard_map(jax.grad(lambda w: lf(w, mbs, tgt)), mesh=mesh2,
-                           in_specs=(P("stage", None, None),),
-                           out_specs=P("stage", None, None),
-                           axis_names={"stage"}))(ws)
+gr = jax.jit(compat.shard_map(jax.grad(lambda w: lf(w, mbs, tgt)), mesh=mesh2,
+                              in_specs=(P("stage", None, None),),
+                              out_specs=P("stage", None, None),
+                              axis_names={"stage"}, check=True))(ws)
 gref = jax.grad(lambda ws: jnp.mean((jnp.tanh(jnp.tanh(jnp.tanh(jnp.tanh(
     mbs @ ws[0]) @ ws[1]) @ ws[2]) @ ws[3]) - tgt) ** 2))(ws)
 assert jnp.allclose(gr, gref, atol=1e-4), "pipeline grad mismatch"

@@ -106,7 +106,8 @@ def test_registry_roundtrip(temp_experiment):
 
 def test_runner_skips_on_unmet_device_requirement(temp_experiment):
     name = temp_experiment("zztest.needsmany", requires_devices=99)
-    report = Runner(duration=0.0, only=[name], load_builtin=False).run()
+    report = Runner(duration=0.0, only=[name], load_builtin=False,
+                    records_dir=None).run()
     assert len(report.records) == 1
     r = report.records[0]
     assert r.skipped and not r.error and "99 devices" in r.reason
@@ -118,15 +119,30 @@ def test_runner_turns_exceptions_into_error_records(temp_experiment):
         raise ValueError("broken rig")
 
     name = temp_experiment("zztest.boom", fn=boom)
-    report = Runner(duration=0.0, only=[name], load_builtin=False).run()
+    report = Runner(duration=0.0, only=[name], load_builtin=False,
+                    records_dir=None).run()
     assert not report.ok
     assert report.errors[0].reason == "ValueError: broken rig"
     assert report.errors[0].experiment == name
 
 
+def test_runner_emit_failures_propagate_not_recorded(temp_experiment):
+    """A failing emit callback (closed pipe, full disk) must raise, not be
+    misattributed to the experiment under measurement as an ERROR row."""
+    name = temp_experiment("zztest.emitboom")
+
+    def emit(r):
+        raise BrokenPipeError("consumer went away")
+
+    with pytest.raises(BrokenPipeError):
+        Runner(duration=0.0, only=[name], load_builtin=False,
+               records_dir=None).run(emit=emit)
+
+
 def test_runner_stamps_wall_clock_metadata(temp_experiment):
     name = temp_experiment("zztest.stamp")
-    report = Runner(duration=0.0, only=[name], load_builtin=False).run()
+    report = Runner(duration=0.0, only=[name], load_builtin=False,
+                    records_dir=None).run()
     r = report.records[0]
     assert r.wall_time is not None and r.elapsed_s is not None
 
@@ -140,7 +156,7 @@ def test_builtin_registrations_cover_all_families():
 
 
 def test_inpath_skips_on_single_device():
-    report = Runner(duration=0.0, only=["inpath"]).run()
+    report = Runner(duration=0.0, only=["inpath"], records_dir=None).run()
     import jax
     if len(jax.devices()) >= 2:
         pytest.skip("multi-device backend; inpath actually runs")
@@ -155,7 +171,7 @@ def test_inpath_skips_on_single_device():
 def test_cli_jsonl_out_and_exit_code(tmp_path):
     out = tmp_path / "records.jsonl"
     rc = main(["--only", "headroom.transfer_nic", "--duration", "0.01",
-               "--format", "jsonl", "--out", str(out)])
+               "--format", "jsonl", "--out", str(out), "--no-records"])
     assert rc == 0
     recs = list(read_jsonl(open(out)))
     assert len(recs) == 6  # 3 message sizes x 2 worker counts
@@ -173,8 +189,58 @@ def test_cli_nonzero_on_error(tmp_path, temp_experiment):
 
     name = temp_experiment("zztest.clifail", fn=boom)
     out = tmp_path / "r.csv"
-    rc = main(["--only", name, "--duration", "0.0", "--out", str(out)])
+    rc = main(["--only", name, "--duration", "0.0", "--out", str(out),
+               "--no-records"])
     assert rc == 1
+
+
+# ---------------------------------------------------------------------------
+# per-run Record persistence + diff
+# ---------------------------------------------------------------------------
+
+def test_runner_persists_jsonl_stream(tmp_path, temp_experiment):
+    name = temp_experiment("zztest.persist")
+    rdir = tmp_path / "records"
+    report = Runner(duration=0.0, only=[name], load_builtin=False,
+                    records_dir=str(rdir)).run()
+    assert report.records_path is not None
+    files = sorted(rdir.glob("run-*.jsonl"))
+    assert [str(f) for f in files] == [report.records_path]
+    back = list(read_jsonl(open(report.records_path)))
+    assert back == report.records
+
+
+def test_runner_persisted_streams_get_distinct_paths(tmp_path,
+                                                     temp_experiment):
+    name = temp_experiment("zztest.persist2")
+    rdir = str(tmp_path / "records")
+    mk = lambda: Runner(duration=0.0, only=[name], load_builtin=False,  # noqa: E731
+                        records_dir=rdir)
+    paths = {mk().run().records_path for _ in range(3)}
+    assert len(paths) == 3  # same-second runs must not clobber each other
+
+
+def test_diff_cli_reports_per_experiment_deltas(tmp_path, capsys):
+    old = [Record("fam.a", "r1", "ops", 100.0),
+           Record("fam.a", "r2", "ops", 5.0),
+           Record("fam.b", "r3", "ops", 1.0)]
+    new = [Record("fam.a", "r1", "ops", 150.0),          # changed
+           Record("fam.a", "r2", "ops", 5.0),            # unchanged
+           Record("fam.b", "r3", "ops", 1.0, skipped=True),  # flag flip
+           Record("fam.c", "r4", "ops", 9.0)]            # added
+    po, pn = tmp_path / "old.jsonl", tmp_path / "new.jsonl"
+    write_jsonl(old, open(po, "w"))
+    write_jsonl(new, open(pn, "w"))
+    assert main(["diff", str(po), str(pn)]) == 0
+    out = capsys.readouterr().out
+    assert "fam.a:" in out and "r1.ops: 100 -> 150 (+50.0%)" in out
+    assert "r2" not in out                    # unchanged rows stay silent
+    assert "skipped False -> True" in out
+    assert "r4.ops: added (9)" in out
+
+
+def test_diff_cli_usage_error():
+    assert main(["diff", "only-one.jsonl"]) == 2
 
 
 # ---------------------------------------------------------------------------
@@ -192,8 +258,21 @@ def test_wire_bytes_int8_a2a_models_per_block_scales():
         2 * a2a, rel=1e-3)
     # compression still wins vs fp32 wire
     assert a2a < _wire_bytes(n, size, "stock") / 3.9
+
+
+def test_wire_bytes_int8_ring_models_fp32_all_gather():
+    """``ring_allreduce(wire_int8=True)`` quantizes every reduce-scatter hop
+    but gathers the reduced chunks in fp32 (``all_gather`` of the fp32
+    accumulator) — the model must charge that phase at 4 B/element, not 1."""
+    n, size = 4, 1 << 20
     ring = _wire_bytes(n, size, "int8_ring")
-    assert ring == int(2 * (n - 1) / n * size + 2 * (n - 1) * 4)
+    rs_int8 = (n - 1) / n * size + (n - 1) * 4   # int8 chunks + fp32 scales
+    ag_fp32 = (n - 1) / n * size * 4             # fp32 gather phase
+    assert ring == int(rs_int8 + ag_fp32)
+    # still cheaper than the fp32 wire (5/8 of stock), but no longer the
+    # seed's both-phases-int8 fiction (~2/8)
+    stock = _wire_bytes(n, size, "stock")
+    assert 0.6 * stock < ring < 0.65 * stock
 
 
 # ---------------------------------------------------------------------------
