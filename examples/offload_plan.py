@@ -42,6 +42,7 @@ def main():
     plan = make_plan(terms, res)
     print("\nOffloadPlan:")
     print(f"  dp_method       = {plan.dp_method}")
+    print(f"  dp_bucket_bytes = {plan.dp_bucket_bytes}")
     print(f"  use_quant_kernel= {plan.use_quant_kernel}")
     print(f"  remat           = {plan.remat}")
     print(f"  microbatches    = {plan.microbatches}")

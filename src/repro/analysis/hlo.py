@@ -154,8 +154,23 @@ def parse_collectives(hlo_text: str, n_devices: int,
                     break
             if kind is not None and "-done(" not in ln:
                 res = ln.split("=", 1)
-                result_bytes = shape_bytes(res[0])
-                args = re.search(r"\((.*?)\)", res[1])
+                # the result type sits AFTER the '=', before the op name:
+                #   %all-gather.1 = f32[4,250]{1,0} all-gather(f32[1,250] %x)
+                # (the seed parsed res[0] — the instruction name — and got 0
+                # bytes for every collective result, so all-gather wire
+                # bytes were silently never counted)
+                head_m = re.search(rf"\s*{kind}(-start)?\(", res[1])
+                # unknown print variants fall back to the whole RHS — an
+                # overcount that shows up in totals, rather than a silent 0
+                head = res[1][:head_m.start()] if head_m else res[1]
+                shapes = [shape_bytes(m.group(0))
+                          for m in _SHAPE_RE.finditer(head)]
+                # async -start results are (operand, result) tuples; the
+                # wire payload is the last component
+                result_bytes = (shapes[-1] if "-start(" in ln
+                                else sum(shapes)) if shapes else 0
+                args = re.search(r"\((.*?)\)", res[1][head_m.end() - 1:]
+                                 if head_m else res[1])
                 operand_bytes = shape_bytes(args.group(1)) if args else 0
                 gs, ng, dcn = _parse_groups(ln, n_devices, pod_size)
                 ops[cname].append(CollectiveOp(kind, cname, operand_bytes,

@@ -4,17 +4,25 @@ The paper's Fig. 5/6: put the processor *in the data path* (embedded
 function mode) and measure how much CPU remains; compare the kernel network
 stack against a user-space stack (DPDK).
 
-TPU mapping: run an all-reduce over a mesh axis four ways and measure
+TPU mapping: run an all-reduce over a mesh axis five ways and measure
 (a) wall time on this backend and (b) wire bytes per device, which on real
 hardware is the collective-term denominator:
 
-  stock      — jax.lax.pmean (XLA's collective stack = "kernel stack")
-  ring       — explicit ppermute ring            ("user-space stack")
-  int8_a2a   — all_to_all with int8 compression  ("+ offloaded transform")
-  int8_ring  — ring with per-hop int8 compression (deepest in-path variant)
+  stock         — jax.lax.pmean (XLA's collective stack = "kernel stack")
+  ring          — explicit ppermute ring            ("user-space stack")
+  int8_a2a      — all_to_all with int8 compression  ("+ offloaded transform")
+  int8_ring     — ring with per-hop int8 compression AND an int8 all-gather
+                  (the deepest in-path variant, fully compressed wire)
+  int8_pairwise — shape-preserving int8 ring broadcast-accumulate (the
+                  production path for partial-manual payloads)
+
+A second experiment, ``inpath.bucketing``, measures the *launch* side of
+the profitability rule: a multi-leaf gradient tree reduced leaf-wise (one
+collective chain per leaf) vs bucketed (one chain per fusion buffer plus
+one grouped pmean), with trace-time chain counts and wall time per step.
 
 Emits the unified ``Record`` schema; ``relative`` is the slowdown vs the
-stock stack (stock == 1.0).
+stock stack (stock == 1.0; for bucketing, vs the leaf-wise path).
 """
 from __future__ import annotations
 
@@ -22,12 +30,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import runtime
 from repro.experiments.measure import measure as _measure
 from repro.experiments.record import Record
 from repro.parallel import collectives as C
 from repro.parallel import compat
 
 EXPERIMENT = "inpath.collectives"
+EXPERIMENT_BUCKETING = "inpath.bucketing"
 
 SCALE_BYTES = 4  # fp32 quantization scale carried per compressed block
 
@@ -36,12 +46,15 @@ def _wire_bytes(n: int, size: int, method: str) -> int:
     """Per-device wire bytes for an all-reduce of ``size`` fp32 elements.
 
     Compressed methods ship 1 B/element payload plus one fp32 scale per
-    block: ``int8_a2a`` quantizes per chunk row (n blocks of size/n
-    elements, see ``collectives.compressed_psum``) in both exchange phases;
-    ``int8_ring`` requantizes per reduce-scatter hop (one chunk + scale per
-    hop) but its all-gather phase is fp32 — ``collectives.ring_allreduce``
-    gathers the reduced chunks with a plain ``all_gather`` of the fp32
-    accumulator, so that phase costs 4 B/element on the wire."""
+    block.  ``int8_a2a`` quantizes per chunk row (n blocks of size/n
+    elements, see ``collectives.compressed_psum``) in both exchange
+    phases.  ``int8_ring`` requantizes per reduce-scatter hop (one chunk +
+    scale per hop) and now also quantizes the accumulator before the
+    all-gather, so both phases cost ~1 B/element — ~2/8 of the stock fp32
+    wire at large n.  ``int8_pairwise`` ships the whole payload (not a
+    chunk) per hop with one rowwise scale — the measured payload here is a
+    single row per device.  These models are checked against bytes counted
+    from the compiled collective HLO in the test suite."""
     full = size * 4
     if method == "stock":
         return int(2 * (n - 1) / n * full)          # ring all-reduce, fp32
@@ -51,9 +64,14 @@ def _wire_bytes(n: int, size: int, method: str) -> int:
         # n chunk-blocks, each int8 payload + fp32 scale, both phases
         return int(2 * (n - 1) / n * (size + n * SCALE_BYTES))
     if method == "int8_ring":
-        # reduce-scatter: int8 chunk + fp32 scale per hop; all-gather: fp32
-        return int((n - 1) / n * size + (n - 1) * SCALE_BYTES
-                   + (n - 1) / n * full)
+        # reduce-scatter: int8 chunk + fp32 scale per hop;
+        # all-gather: int8 owned chunk + fp32 scale, ring-gathered
+        rs = (n - 1) / n * size + (n - 1) * SCALE_BYTES
+        ag = (n - 1) / n * size + (n - 1) * SCALE_BYTES
+        return int(rs + ag)
+    if method == "int8_pairwise":
+        # (n-1) hops, each the full int8 payload + one fp32 rowwise scale
+        return int((n - 1) * (size + SCALE_BYTES))
     raise ValueError(method)
 
 
@@ -88,4 +106,68 @@ def measure(size: int = 1 << 20, duration: float = 0.3) -> list[Record]:
         run(lambda g: C.compressed_psum(g, "pod")[0], "int8_a2a", stock_s),
         run(lambda g: C.ring_allreduce(g, "pod", wire_int8=True)[0],
             "int8_ring", stock_s),
+        run(lambda g: C.pairwise_int8_allreduce(g, "pod")[0],
+            "int8_pairwise", stock_s),
     ]
+
+
+# ---------------------------------------------------------------------------
+# bucketed vs leaf-wise gradient reduction
+# ---------------------------------------------------------------------------
+
+# A gradient-tree silhouette: a few compressible weight leaves plus small
+# bias/norm leaves that stay below collectives.MIN_COMPRESS_SIZE.
+BUCKETING_LEAF_SIZES = {
+    "w_embed": 1 << 15, "w_attn": 1 << 14, "w_mlp": 3 * (1 << 13),
+    "w_head": 1 << 14, "b_attn": 256, "b_mlp": 512, "ln_scale": 128,
+}
+
+
+def measure_bucketing(duration: float = 0.3,
+                      method: str = "int8_ring") -> list[Record]:
+    """Leaf-wise vs bucketed ``reduce_gradients`` over a multi-leaf tree:
+    trace-time collective-chain counts and wall time per step."""
+    n = len(jax.devices())
+    if n < 2:
+        raise RuntimeError("bucketing measurement needs >= 2 devices "
+                           "(run under --xla_force_host_platform_device_count)")
+    mesh = compat.make_mesh((n,), ("pod",))
+    ks = jax.random.split(jax.random.key(0), len(BUCKETING_LEAF_SIZES))
+    tree = {name: jax.random.normal(k, (n, s), jnp.float32)
+            for (name, s), k in zip(BUCKETING_LEAF_SIZES.items(), ks)}
+    want = {k: jnp.mean(v, axis=0, keepdims=True) for k, v in tree.items()}
+    specs = jax.tree_util.tree_map(lambda _: P("pod"), tree)
+    n_compressible = sum(
+        1 for s in BUCKETING_LEAF_SIZES.values() if s >= C.MIN_COMPRESS_SIZE)
+
+    def run(bucketed, base=None):
+        f = jax.jit(compat.shard_map(
+            lambda t: C.reduce_gradients(t, "pod", method, None,
+                                         bucketed=bucketed)[0],
+            mesh=mesh, in_specs=(specs,), out_specs=specs, check=False))
+        C.reset_chain_count()
+        f.lower(tree)                       # fresh trace -> chain count
+        chains = C.chain_count()
+        out = f(tree)
+        err = max(float(jnp.max(jnp.abs(out[k] - want[k]))) for k in tree)
+        m = _measure(lambda: f(tree), duration)
+        wall = m.s_per_call
+        return Record(
+            EXPERIMENT_BUCKETING, "bucketed" if bucketed else "leafwise",
+            "wall_s_per_call", wall, unit="s",
+            relative=wall / base if base else 1.0,
+            params={"collective_chains": chains,
+                    "leaves": len(BUCKETING_LEAF_SIZES),
+                    "compressible_leaves": n_compressible,
+                    "method": method, "quant_impl": "xla",
+                    "max_error": err, "devices": n,
+                    "median_s": m.median_s, "p90_s": m.p90_s})
+
+    # pin ONE transform implementation for both arms: the fused buffers
+    # cross the Pallas auto-dispatch threshold while the individual leaves
+    # do not, and this experiment isolates launch overhead (chain count),
+    # not a kernel-impl switch
+    with runtime.use_policy(quant_impl="xla"):
+        leafwise = run(False)
+        bucketed = run(True, base=leafwise.value)
+    return [leafwise, bucketed]

@@ -30,6 +30,7 @@ from repro.experiments.record import Record
 class OffloadPlan:
     dp_method: str = "stock"
     use_quant_kernel: bool = False
+    dp_bucket_bytes: Optional[int] = None   # bucket-granularity compression
     remat: str = "full"
     microbatches: int = 1
     notes: list = field(default_factory=list)
@@ -57,9 +58,14 @@ def make_plan(terms: RooflineTerms, stressor_records: Iterable[Record],
     if multi_pod and hr["bottleneck"] == "collective" \
             and hr["headroom_fraction"] > 0.05:
         plan.dp_method = "int8_a2a"
+        from repro.parallel.buckets import DEFAULT_BUCKET_BYTES
+        plan.dp_bucket_bytes = DEFAULT_BUCKET_BYTES
         plan.notes.append("collective-bound with headroom: int8 in-path "
-                          "gradient compression enabled (paper sec. III-B3: "
-                          "transparent compression is a profitable offload)")
+                          "gradient compression enabled at bucket "
+                          "granularity — one chain per fusion buffer, not "
+                          "per leaf (paper sec. III-B3: transparent "
+                          "compression is a profitable offload only while "
+                          "the transform keeps up with the link)")
     else:
         plan.notes.append("in-path compression NOT enabled "
                           "(paper sec. II-B1: don't add work to a saturated "

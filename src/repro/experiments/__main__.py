@@ -3,7 +3,8 @@
     PYTHONPATH=src python -m repro.experiments [--only headroom,stressors]
         [--duration 0.25] [--format csv|jsonl] [--out FILE] [--devices N]
         [--records-dir DIR | --no-records] [--list]
-    PYTHONPATH=src python -m repro.experiments diff old.jsonl new.jsonl
+    PYTHONPATH=src python -m repro.experiments diff old.jsonl new.jsonl \
+        [--threshold METRIC=REL ...]
 
 Exit status is nonzero when any experiment errors (SKIPs are not errors) —
 the seed's ``benchmarks/run.py`` swallowed exceptions and always exited 0.
@@ -11,7 +12,9 @@ the seed's ``benchmarks/run.py`` swallowed exceptions and always exited 0.
 pass it on the command line rather than setting it programmatically).
 Every run also persists its Record stream as JSONL under
 ``experiments/records/`` (``--records-dir`` moves it, ``--no-records``
-turns it off); ``diff`` compares two persisted streams per experiment.
+turns it off), with each Record stamped with the producing git commit;
+``diff`` compares two persisted streams per experiment and exits nonzero
+when a ``--threshold``-gated metric moves more than its noise bound.
 """
 from __future__ import annotations
 
@@ -26,8 +29,11 @@ def _parse(argv) -> argparse.Namespace:
     ap = argparse.ArgumentParser(
         prog="python -m repro.experiments",
         description="Run paper characterization experiments.",
-        epilog="subcommand: 'diff OLD.jsonl NEW.jsonl' compares two "
-               "persisted Record streams per experiment.")
+        epilog="subcommand: 'diff OLD.jsonl NEW.jsonl [--threshold "
+               "METRIC=[+|-]REL ...]' compares two persisted Record streams "
+               "per experiment; --threshold gates that metric's relative "
+               "delta (+ = increases only, - = drops only) and flips the "
+               "exit status when exceeded.")
     ap.add_argument("--only", default=None,
                     help="comma-separated experiment names or family "
                          "prefixes (e.g. 'headroom,stressors.suite')")

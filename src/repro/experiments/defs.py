@@ -68,6 +68,14 @@ def _inpath(*, duration: float) -> Iterable[Record]:
     return inpath.measure(size=1 << 18, duration=duration)
 
 
+@experiment("inpath.bucketing", classes=("NETWORK", "CPU"),
+            requires_devices=2, figure="Fig. 5/6 (launch side)",
+            description="leaf-wise vs bucketed compressed gradient reduction")
+def _inpath_bucketing(*, duration: float) -> Iterable[Record]:
+    from repro.core import inpath
+    return inpath.measure_bucketing(duration=duration)
+
+
 @experiment("roofline.table", figure="roofline table",
             description="three-term roofline of compiled dry-run cells")
 def _roofline(*, duration: float) -> Iterable[Record]:

@@ -1,27 +1,34 @@
 """Diff two persisted Record streams (JSONL), per experiment.
 
-    PYTHONPATH=src python -m repro.experiments diff old.jsonl new.jsonl
+    PYTHONPATH=src python -m repro.experiments diff old.jsonl new.jsonl \
+        [--threshold METRIC=REL ...]
 
-The first step of the regression-diff direction in ROADMAP.md: Runner
-persists one JSONL stream per run under ``experiments/records/``; this
-command compares two of them row by row.  Rows are keyed by
-``(experiment, name, metric)``; for keys present in both streams with
-numeric values the absolute and relative delta is printed, and rows only
-in one stream are reported as added/removed.  SKIP/ERROR flag changes are
-called out explicitly (a row silently flipping to skipped is how coverage
-regressions hide).
+The regression-diff direction in ROADMAP.md: Runner persists one JSONL
+stream per run under ``experiments/records/`` (each Record stamped with
+the producing git commit in ``params``); this command compares two of
+them row by row.  Rows are keyed by ``(experiment, name, metric)``; for
+keys present in both streams with numeric values the absolute and
+relative delta is printed, and rows only in one stream are reported as
+added/removed.  SKIP/ERROR flag changes are called out explicitly (a row
+silently flipping to skipped is how coverage regressions hide).
 
-This is a *report*, not a gate: exit status is 0 whenever both files
-parse.  Thresholding deltas into failures needs a noise model per metric
-(wall-clock metrics on shared CI runners jitter far more than wire-byte
-models) and is left to the consumer.
+Without thresholds this is a *report*: exit status is 0 whenever both
+files parse.  ``--threshold METRIC=[+|-]REL`` turns it into a *gate* for
+that metric: a row whose relative delta ``(new-old)/|old|`` exceeds REL in
+the gated direction is a violation and the exit status becomes 1.  A bare
+``REL`` gates both directions; ``+REL`` gates only increases (wall-clock
+regressions), ``-REL`` only drops (rate-metric regressions) — so a large
+improvement never fails the build.  Thresholds are per-metric because
+noise is: wall-clock metrics on shared CI runners need loose bounds
+(catastrophic-regression catches only), while modeled metrics (wire
+bytes) can be held to 0.
 """
 from __future__ import annotations
 
 import itertools
 import os
 import sys
-from typing import Callable, Iterable
+from typing import Callable, Dict, Iterable
 
 from repro.experiments.record import Record, read_jsonl
 
@@ -61,6 +68,42 @@ def _delta_line(name: str, metric: str, old: Record, new: Record) -> str:
     return ""
 
 
+def _rel_delta(old, new):
+    """Signed (new-old)/|old| for numeric pairs; None when not comparable."""
+    if not isinstance(old, (int, float)) or not isinstance(new, (int, float)):
+        return None
+    if old == new:
+        return 0.0
+    if old == 0:
+        return float("inf") if new > old else float("-inf")
+    return (new - old) / abs(old)
+
+
+def threshold_violations(old_idx: dict, new_idx: dict,
+                         thresholds: Dict[str, "Threshold"]) -> list[str]:
+    """Rows whose metric is thresholded and whose relative delta exceeds
+    the bound in the gated direction.  Rows present in only one stream
+    never violate (added and removed rows are reported, not gated —
+    device-count-dependent SKIPs would make them flap)."""
+    out = []
+    for k in sorted(set(old_idx) & set(new_idx)):
+        exp, name, metric = k
+        if metric not in thresholds:
+            continue
+        o, n = old_idx[k], new_idx[k]
+        if o.skipped or n.skipped or o.error or n.error:
+            continue
+        rel = _rel_delta(o.value, n.value)
+        if rel is None:
+            continue
+        t = thresholds[metric]
+        if t.violated(rel):
+            out.append(f"{exp}/{name}.{metric}: "
+                       f"{_fmt_val(o.value)} -> {_fmt_val(n.value)} "
+                       f"(delta {rel:+.1%} outside {t.describe()})")
+    return out
+
+
 def diff_streams(old: Iterable[Record], new: Iterable[Record],
                  out: Callable[[str], None] = print) -> int:
     """Print per-experiment deltas; returns the number of changed rows."""
@@ -91,14 +134,87 @@ def diff_streams(old: Iterable[Record], new: Iterable[Record],
     return changed
 
 
+class Threshold:
+    """A per-metric noise bound, optionally direction-gated.
+
+    ``REL`` gates both directions (|delta| > REL); ``+REL`` gates only
+    increases (wall-clock regressions), ``-REL`` only drops (rate-metric
+    regressions) — so a big *improvement* in a gated-direction metric
+    never fails the build."""
+
+    def __init__(self, spec: str):
+        self.direction = spec[0] if spec[:1] in ("+", "-") else ""
+        self.bound = float(spec[1:] if self.direction else spec)
+        if self.bound < 0:
+            raise ValueError(f"threshold bound must be >= 0: {spec!r}")
+
+    def violated(self, rel: float) -> bool:
+        if self.direction == "+":
+            return rel > self.bound
+        if self.direction == "-":
+            return -rel > self.bound
+        return abs(rel) > self.bound
+
+    def describe(self) -> str:
+        return f"{self.direction or '±'}{self.bound:.1%}"
+
+
+def _parse_thresholds(args: list[str]) -> Dict[str, Threshold]:
+    out: Dict[str, Threshold] = {}
+    for a in args:
+        metric, _, bound = a.partition("=")
+        if not metric or not bound:
+            raise ValueError(f"bad --threshold {a!r}; want METRIC=[+|-]REL")
+        try:
+            out[metric] = Threshold(bound)
+        except ValueError:
+            raise ValueError(f"bad --threshold {a!r}; want METRIC=[+|-]REL")
+    return out
+
+
 def main(argv: list[str]) -> int:
-    if len(argv) != 2:
-        print("usage: python -m repro.experiments diff OLD.jsonl NEW.jsonl",
-              file=sys.stderr)
+    paths, thr_args = [], []
+    it = iter(argv)
+    for a in it:
+        if a == "--threshold":
+            nxt = next(it, None)
+            if nxt is None:
+                print("--threshold needs METRIC=REL", file=sys.stderr)
+                return 2
+            thr_args.append(nxt)
+        elif a.startswith("--threshold="):
+            thr_args.append(a.split("=", 1)[1])
+        else:
+            paths.append(a)
+    if len(paths) != 2:
+        print("usage: python -m repro.experiments diff OLD.jsonl NEW.jsonl "
+              "[--threshold METRIC=[+|-]REL ...]", file=sys.stderr)
         return 2
     try:
-        with open(argv[0]) as fo, open(argv[1]) as fn:
-            diff_streams(read_jsonl(fo), read_jsonl(fn))
+        thresholds = _parse_thresholds(thr_args)
+    except ValueError as e:
+        print(str(e), file=sys.stderr)
+        return 2
+    try:
+        try:
+            with open(paths[0]) as fo, open(paths[1]) as fn:
+                oidx = _index(read_jsonl(fo))
+                nidx = _index(read_jsonl(fn))
+        except OSError as e:
+            print(f"diff: cannot read stream: {e}", file=sys.stderr)
+            return 2
+        present = {k[2] for k in set(oidx) | set(nidx)}
+        for m in thresholds:
+            if m not in present:
+                # a typo'd metric name would otherwise silently gate nothing
+                print(f"warning: --threshold metric {m!r} matches no rows "
+                      "in either stream", file=sys.stderr)
+        diff_streams(oidx.values(), nidx.values())
+        violations = threshold_violations(oidx, nidx, thresholds)
+        for v in violations:
+            print(f"THRESHOLD EXCEEDED {v}", file=sys.stderr)
+        if violations:
+            return 1
     except BrokenPipeError:
         # downstream closed early (`diff ... | head`): not an error, but
         # stdout must be detached or the interpreter tracebacks on exit

@@ -18,14 +18,19 @@ own skip rows) pass through unchanged apart from ``stamp()``.
 Persistence: unless ``records_dir=None``, every run streams its Records
 to ``<records_dir>/run-<timestamp>-<pid>-<seq>.jsonl`` (default
 ``experiments/records/``) as they are produced — a crash mid-run leaves
-the rows measured so far on disk.  ``RunReport.records_path`` names the
-file; ``python -m repro.experiments diff old.jsonl new.jsonl`` compares
-two such streams (see ``repro.experiments.diff``).
+the rows measured so far on disk.  Every emitted Record is stamped with
+the producing git commit (``params["git_commit"]``, when a repo is
+reachable) so a persisted stream identifies its code version.
+``RunReport.records_path`` names the file; ``python -m repro.experiments
+diff old.jsonl new.jsonl [--threshold METRIC=[+|-]REL]`` compares two
+such streams and can gate on per-metric, direction-aware noise thresholds
+(see ``repro.experiments.diff``).
 """
 from __future__ import annotations
 
 import itertools
 import os
+import subprocess
 import time
 import traceback
 from dataclasses import dataclass, field
@@ -53,6 +58,25 @@ class RunReport:
 
     def by_experiment(self, name: str) -> list[Record]:
         return [r for r in self.records if r.experiment == name]
+
+
+def _git_commit() -> Optional[str]:
+    """The commit of the checkout this code runs from, or None when it is
+    not a git repo / git is unavailable.
+
+    Resolved against this file's directory, NOT the process cwd — a run
+    launched from inside some other repository must not stamp Records with
+    that repo's HEAD.  Every Record a Runner emits carries the sha
+    (``params["git_commit"]``) so a persisted stream identifies the code
+    that produced it — the regression-diff CI job keys on this."""
+    try:
+        p = subprocess.run(["git", "rev-parse", "HEAD"],
+                           capture_output=True, text=True, timeout=10,
+                           cwd=os.path.dirname(os.path.abspath(__file__)))
+    except Exception:
+        return None
+    sha = p.stdout.strip()
+    return sha if p.returncode == 0 and sha else None
 
 
 def _device_count() -> int:
@@ -94,9 +118,12 @@ class Runner:
             verbose: bool = False) -> RunReport:
         report = RunReport()
         ndev = _device_count()
+        commit = _git_commit()
         report.records_path, stream = self._open_stream()
 
         def out(r: Record) -> Record:
+            if commit is not None:
+                r.params.setdefault("git_commit", commit)
             report.records.append(r)
             if r.error:
                 report.errors.append(r)

@@ -1,10 +1,14 @@
 """Public jit'd wrappers for the Pallas kernels, with policy dispatch.
 
-On real TPUs ``runtime.policy()['pallas_interpret']`` is False and the
-kernels compile to Mosaic; on this CPU container they run in interpret mode
-and are validated against kernels/ref.py in tests.  The model code calls
-these through runtime.policy() switches (see models/attention.py,
-models/rwkv6.py, parallel/collectives.py).
+The ONE place ``runtime.policy()`` decides which implementation backs each
+hot-spot op: callers (models/attention.py, models/rwkv6.py,
+parallel/collectives.py) go through these wrappers rather than re-reading
+the policy.  ``pallas_interpret=None`` (the default) resolves per backend
+via ``kernels.quant.resolve_interpret`` — compiled Mosaic on TPU/GPU,
+interpreter on this CPU container (where the kernels are validated against
+kernels/ref.py in tests).  ``quant_impl="auto"`` routes payloads above
+``quant.PALLAS_QUANT_MIN_SIZE`` through the Pallas quant kernels and the
+rest through the jnp reference (the launch-overhead profitability rule).
 """
 from __future__ import annotations
 
@@ -21,7 +25,16 @@ from repro.kernels import rwkv6_scan as _rs
 
 
 def _interp() -> bool:
-    return bool(runtime.policy()["pallas_interpret"])
+    return _q.resolve_interpret(runtime.policy()["pallas_interpret"])
+
+
+def use_pallas_quant(size: int) -> bool:
+    """Whether a quant payload of ``size`` elements takes the Pallas path
+    under the current policy (``pallas`` forces, ``xla`` forbids, ``auto``
+    keys on ``quant.PALLAS_QUANT_MIN_SIZE``)."""
+    impl = runtime.policy()["quant_impl"]
+    return impl == "pallas" or (impl == "auto"
+                                and size >= _q.PALLAS_QUANT_MIN_SIZE)
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
@@ -38,15 +51,19 @@ def rwkv6_scan(r, k, v, w, u, s0=None, *, chunk=64):
                               interpret=_interp())
 
 
-@jax.jit
+# NOTE: unlike the attention/rwkv wrappers these are deliberately NOT
+# jitted: a jit cache keys on avals only, so a runtime-policy flip with an
+# already-seen shape would silently reuse the stale dispatch.  Callers are
+# inside jit/shard_map traces anyway (collectives, stressors time a jitted
+# lambda), so nothing is lost.
+
 def quantize_int8(x):
-    if runtime.policy()["quant_impl"] == "pallas":
+    if use_pallas_quant(x.size):
         return _q.quantize_int8(x, interpret=_interp())
     return _ref.quantize_int8_ref(x)
 
 
-@partial(jax.jit, static_argnames=("dtype",))
 def dequantize_int8(q, scale, dtype=jnp.float32):
-    if runtime.policy()["quant_impl"] == "pallas":
+    if use_pallas_quant(q.size):
         return _q.dequantize_int8(q, scale, dtype=dtype, interpret=_interp())
     return _ref.dequantize_int8_ref(q, scale).astype(dtype)

@@ -3,14 +3,44 @@
 The compute hot-spot of the in-path gradient compression (the paper's
 offloaded transform).  Rowwise symmetric scales; blocks (block_rows, C)
 stream through VMEM so the transform runs at HBM bandwidth.
+
+``interpret=None`` (the default) resolves per backend: compiled Mosaic /
+Triton on TPU and GPU, interpreter on CPU — keyed on
+``jax.default_backend()``, never on the jax version.  Row counts that are
+not a multiple of ``block_rows`` are zero-padded up to the next block and
+the pad rows sliced off the result (the seed asserted instead, which made
+ragged callers fail silently at trace time).
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+_COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+# Payload size (elements) above which the quantize/dequantize transform is
+# worth a Pallas kernel launch — below it the launch overhead beats the
+# saving (the paper's offload-profitability rule, applied to the transform
+# itself).  ``kernels/ops.py`` keys the ``quant_impl="auto"`` policy on it.
+PALLAS_QUANT_MIN_SIZE = 1 << 16
+
+
+def resolve_interpret(interpret):
+    """None -> auto: compiled where Pallas has a real lowering, interpreted
+    on CPU — keyed on ``jax.default_backend()``, never the jax version.
+    Explicit booleans pass through untouched."""
+    if interpret is None:
+        return jax.default_backend() not in _COMPILED_BACKENDS
+    return interpret
+
+
+def _pad_rows(x, block_rows):
+    """Zero-pad axis 0 up to a multiple of block_rows.  Returns (x, pad)."""
+    pad = (-x.shape[0]) % block_rows
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return x, pad
 
 
 def _quant_kernel(x_ref, q_ref, s_ref):
@@ -27,37 +57,42 @@ def _dequant_kernel(q_ref, s_ref, x_ref):
         x_ref.dtype)
 
 
-def quantize_int8(x, *, block_rows=256, interpret=True):
+def quantize_int8(x, *, block_rows=256, interpret=None):
     """x: (N, C) -> (q int8 (N, C), scale fp32 (N, 1))."""
     N, C = x.shape
+    interpret = resolve_interpret(interpret)
     block_rows = min(block_rows, N)
-    assert N % block_rows == 0, (N, block_rows)
-    grid = (N // block_rows,)
-    return pl.pallas_call(
+    x, pad = _pad_rows(x, block_rows)
+    grid = ((N + pad) // block_rows,)
+    q, s = pl.pallas_call(
         _quant_kernel,
         grid=grid,
         in_specs=[pl.BlockSpec((block_rows, C), lambda i: (i, 0))],
         out_specs=[pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
                    pl.BlockSpec((block_rows, 1), lambda i: (i, 0))],
-        out_shape=[jax.ShapeDtypeStruct((N, C), jnp.int8),
-                   jax.ShapeDtypeStruct((N, 1), jnp.float32)],
+        out_shape=[jax.ShapeDtypeStruct((N + pad, C), jnp.int8),
+                   jax.ShapeDtypeStruct((N + pad, 1), jnp.float32)],
         interpret=interpret,
     )(x)
+    return (q[:N], s[:N]) if pad else (q, s)
 
 
 def dequantize_int8(q, scale, dtype=jnp.float32, *, block_rows=256,
-                    interpret=True):
+                    interpret=None):
     """q: (N, C) int8, scale: (N, 1) -> (N, C) dtype."""
     N, C = q.shape
+    interpret = resolve_interpret(interpret)
     block_rows = min(block_rows, N)
-    assert N % block_rows == 0, (N, block_rows)
-    grid = (N // block_rows,)
-    return pl.pallas_call(
+    q, pad = _pad_rows(q, block_rows)
+    scale, _ = _pad_rows(scale, block_rows)
+    grid = ((N + pad) // block_rows,)
+    x = pl.pallas_call(
         _dequant_kernel,
         grid=grid,
         in_specs=[pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
                   pl.BlockSpec((block_rows, 1), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((N, C), dtype),
+        out_shape=jax.ShapeDtypeStruct((N + pad, C), dtype),
         interpret=interpret,
     )(q, scale)
+    return x[:N] if pad else x

@@ -1,0 +1,104 @@
+"""Gradient bucketing: fuse a gradient tree into a few contiguous buffers.
+
+The paper's profitability rule for in-path offloads is that the transform
+must keep up with the link — launch overhead is the silent killer.  A
+leaf-wise compressed reduction issues one quantize→exchange→dequantize
+chain per gradient leaf (dozens of tiny collectives per step); bucketing
+flattens the tree into a small number of size-capped fp32 fusion buffers
+so the whole tree crosses the slow axis in one or two chains.
+
+A ``BucketPlan`` is pure shape metadata (computable from abstract leaves):
+which leaves land in which bucket at which offset, and which leaves stay
+out (``min_compress_size`` — tiny leaves reduce at full precision, grouped
+into a single ``pmean``).  ``pack``/``unpack`` round-trip dtypes and
+shapes losslessly, and the same plan packs the error-feedback tree so the
+residual of a compressed exchange is carried per bucket and scattered back
+to per-leaf residuals (``train/step.py`` keeps its per-leaf ``err`` state
+and checkpoint layout).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+
+DEFAULT_BUCKET_BYTES = 4 << 20   # fp32 bytes per fusion buffer
+MIN_COMPRESS_SIZE = 4096         # leaves below this stay out of the buckets
+
+
+@dataclass(frozen=True)
+class Slot:
+    """One leaf's placement inside a bucket."""
+    leaf: int            # index into the flattened-leaf order
+    offset: int          # element offset into the bucket buffer
+    size: int
+    shape: tuple
+    dtype: jnp.dtype
+
+
+@dataclass(frozen=True)
+class BucketPlan:
+    """Partition of a leaf list into fusion buckets + passthrough leaves."""
+    buckets: tuple       # tuple of tuples of Slot
+    passthrough: tuple   # leaf indices that reduce at full precision
+    n_leaves: int
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    def bucket_sizes(self) -> list:
+        return [sum(s.size for s in b) for b in self.buckets]
+
+
+def plan_buckets(leaves: Sequence, *,
+                 bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                 min_compress_size: int = MIN_COMPRESS_SIZE) -> BucketPlan:
+    """Greedy size-capped packing of ``leaves`` (arrays or ShapeDtypeStructs)
+    in flatten order.  A leaf bigger than the cap gets a bucket of its own;
+    leaves below ``min_compress_size`` elements go to ``passthrough``."""
+    cap = max(1, bucket_bytes // 4)   # buckets are fp32 buffers
+    buckets, passthrough = [], []
+    cur, cur_size = [], 0
+    for i, leaf in enumerate(leaves):
+        size = 1
+        for d in leaf.shape:
+            size *= d
+        if size < min_compress_size:
+            passthrough.append(i)
+            continue
+        if cur and cur_size + size > cap:
+            buckets.append(tuple(cur))
+            cur, cur_size = [], 0
+        cur.append(Slot(i, cur_size, size, tuple(leaf.shape),
+                        jnp.dtype(leaf.dtype)))
+        cur_size += size
+    if cur:
+        buckets.append(tuple(cur))
+    return BucketPlan(tuple(buckets), tuple(passthrough), len(leaves))
+
+
+def pack(plan: BucketPlan, leaves: Sequence) -> list:
+    """Concatenate each bucket's leaves into one flat fp32 buffer."""
+    return [jnp.concatenate(
+        [jnp.reshape(leaves[s.leaf], (-1,)).astype(jnp.float32)
+         for s in bucket])
+        for bucket in plan.buckets]
+
+
+def unpack(plan: BucketPlan, buffers: Sequence,
+           like: Optional[Sequence] = None) -> list:
+    """Scatter bucket buffers back into a leaf list.
+
+    Returns a list of ``plan.n_leaves`` entries: bucketed positions hold
+    the restored leaf (shape from the plan, dtype from ``like`` when given,
+    else from the plan), passthrough positions hold ``None`` for the
+    caller to fill."""
+    out = [None] * plan.n_leaves
+    for bucket, buf in zip(plan.buckets, buffers):
+        for s in bucket:
+            dtype = like[s.leaf].dtype if like is not None else s.dtype
+            out[s.leaf] = (buf[s.offset:s.offset + s.size]
+                           .reshape(s.shape).astype(dtype))
+    return out

@@ -12,8 +12,12 @@ from contextlib import contextmanager
 _DEFAULT = {
     "attention_impl": "xla",    # xla | pallas
     "rwkv_impl": "xla",         # xla | pallas
-    "quant_impl": "xla",        # xla | pallas
-    "pallas_interpret": True,   # interpret=True on CPU; False on real TPU
+    "quant_impl": "auto",       # auto | xla | pallas — auto routes payloads
+    #                             above collectives.PALLAS_QUANT_MIN_SIZE
+    #                             through the Pallas kernels
+    "pallas_interpret": None,   # None = auto: interpreted on CPU, compiled
+    #                             on TPU/GPU (kernels.quant.resolve_interpret
+    #                             keys on the backend); booleans force
 }
 
 _local = threading.local()

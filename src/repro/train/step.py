@@ -29,10 +29,16 @@ Z_WEIGHT = 1e-3
 
 @dataclass(frozen=True)
 class TrainOptions:
-    dp_method: str = "stock"       # stock | int8_a2a | int8_ring | ring
+    dp_method: str = "stock"       # stock | int8_a2a | int8_ring |
+    #                                int8_pairwise | ring
     microbatches: int = 1
     remat: bool = True
     sequence_parallel: bool = False  # Megatron-SP over the 'model' axis
+    dp_bucketed: Optional[bool] = None   # fuse grads into bucket buffers
+    #                                (one chain per bucket, not per leaf);
+    #                                None = auto: on for chunked methods,
+    #                                off for shape-preserving int8_pairwise
+    dp_bucket_bytes: int = collectives.DEFAULT_BUCKET_BYTES
     opt: opt.OptConfig = field(default_factory=opt.OptConfig)
 
 
@@ -164,7 +170,9 @@ def make_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
             grads, metrics = _grads_and_metrics(cfg, options,
                                                 state["params"], batch)
             grads, errors = collectives.reduce_gradients(
-                grads, "pod", options.dp_method, state.get("err"))
+                grads, "pod", options.dp_method, state.get("err"),
+                bucketed=options.dp_bucketed,
+                bucket_bytes=options.dp_bucket_bytes)
             errors = (jax.tree_util.tree_map(
                 lambda e: e.astype(jnp.bfloat16), errors)
                 if errors is not None else None)

@@ -1,0 +1,107 @@
+"""Bucketed compressed gradient reduction + wire-byte model consistency,
+on 4 forced host devices (subprocess, like test_collectives)."""
+import os
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.parallel import collectives as C, compat
+from repro.analysis import hlo
+from repro.core.inpath import _wire_bytes
+
+n = 4
+mesh = compat.make_mesh((n,), ("pod",))
+
+# --- wire-byte model vs bytes counted from the compiled collective HLO ---
+size = 1024
+x = jax.random.normal(jax.random.key(0), (n, size))
+cases = {
+    "stock": lambda g: jax.lax.pmean(g, "pod") + 0 * g,
+    "ring": lambda g: C.ring_allreduce(g, "pod")[0],
+    "int8_a2a": lambda g: C.compressed_psum(g, "pod")[0],
+    "int8_ring": lambda g: C.ring_allreduce(g, "pod", wire_int8=True)[0],
+    "int8_pairwise": lambda g: C.pairwise_int8_allreduce(g, "pod")[0],
+}
+for method, fn in cases.items():
+    f = jax.jit(compat.shard_map(fn, mesh=mesh, in_specs=P("pod"),
+                                 out_specs=P("pod"), check=False))
+    txt = f.lower(x).compile().as_text()
+    ops = hlo.parse_collectives(txt, n)
+    assert ops, f"{method}: no collectives found in compiled HLO"
+    counted = hlo.summarize(ops).raw_wire_bytes
+    model = _wire_bytes(n, size, method)
+    # exact on today's sync lowering; 2% slack tolerates future async/fused
+    # rewrites without letting a dtype regression (4x) through
+    assert abs(counted - model) <= 0.02 * model, \
+        f"{method}: model {model} vs HLO {counted}"
+
+# --- bucketed vs leaf-wise reduce_gradients: chains + correctness ---
+sizes = {"w1": 8192, "w2": 512, "w3": 5000, "w4": 16384, "b": 100}
+ks = jax.random.split(jax.random.key(1), len(sizes))
+tree = {k: jax.random.normal(kk, (n, s))
+        for (k, s), kk in zip(sizes.items(), ks)}
+want = {k: jnp.mean(v, axis=0, keepdims=True) for k, v in tree.items()}
+specs = jax.tree_util.tree_map(lambda _: P("pod"), tree)
+
+def reducer(bucketed):
+    return jax.jit(compat.shard_map(
+        lambda t, e: C.reduce_gradients(t, "pod", "int8_ring", e,
+                                        bucketed=bucketed),
+        mesh=mesh, in_specs=(specs, specs), out_specs=(specs, specs),
+        check=False))
+
+zeros = jax.tree_util.tree_map(jnp.zeros_like, tree)
+C.reset_chain_count()
+leafwise = reducer(False)
+leafwise.lower(tree, zeros)
+leaf_chains = C.chain_count()
+C.reset_chain_count()
+bucketed = reducer(True)
+bucketed.lower(tree, zeros)
+bucket_chains = C.chain_count()
+assert leaf_chains == len(sizes), leaf_chains      # one chain per leaf
+assert bucket_chains == 2, bucket_chains           # 1 bucket + grouped pmean
+
+out, _ = bucketed(tree, zeros)
+err = max(float(jnp.max(jnp.abs(out[k] - want[k]))) for k in tree)
+assert err < 0.05, f"bucketed reduction error {err}"
+# small leaves bypass compression entirely: exact
+assert float(jnp.max(jnp.abs(out["b"] - want["b"]))) < 1e-5
+
+# leaf-wise and bucketed agree with each other up to quantization noise
+outl, _ = leafwise(tree, zeros)
+agree = max(float(jnp.max(jnp.abs(out[k] - outl[k]))) for k in tree)
+assert agree < 0.1, agree
+
+# --- error feedback: bucketed int8 matches stock pmean over steps ---
+g = jax.jit(compat.shard_map(
+    lambda t, e: C.reduce_gradients(t, "pod", "int8_ring", e),
+    mesh=mesh, in_specs=(specs, specs), out_specs=(specs, specs),
+    check=False))
+errs = zeros
+acc = jax.tree_util.tree_map(lambda v: jnp.zeros((1,) + v.shape[1:]), tree)
+for _ in range(20):
+    o, errs = g(tree, errs)
+    acc = jax.tree_util.tree_map(lambda a, b: a + b[:1], acc, o)
+conv = max(float(jnp.max(jnp.abs(acc[k] / 20 - want[k]))) for k in tree)
+assert conv < 2e-2, f"bucketed error feedback did not converge: {conv}"
+
+# residual tree keeps leaf dtypes/shapes (train state stays per-leaf)
+_, res = bucketed(tree, zeros)
+for k in tree:
+    assert res[k].shape == tree[k].shape and res[k].dtype == tree[k].dtype
+
+print("ALL_OK")
+"""
+
+
+def test_bucketed_collectives_and_wire_model_4dev():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "ALL_OK" in out.stdout, out.stdout + out.stderr

@@ -1,0 +1,117 @@
+"""Gradient bucketing: plan/pack/unpack round-trips, size caps, and the
+Pallas quant dispatch that backs the bucketed collective chains."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import runtime
+from repro.parallel import buckets as B
+from repro.parallel import collectives as C
+
+
+def _leaves():
+    ks = jax.random.split(jax.random.key(0), 5)
+    return [
+        jax.random.normal(ks[0], (64, 128), jnp.float32),       # 8192
+        jax.random.normal(ks[1], (100,), jnp.float32),          # passthrough
+        jax.random.normal(ks[2], (3, 2048), jnp.bfloat16),      # 6144
+        jax.random.normal(ks[3], (4096,), jnp.float32),         # 4096 (edge)
+        jax.random.normal(ks[4], (17,), jnp.bfloat16),          # passthrough
+    ]
+
+
+def test_plan_respects_min_compress_size():
+    plan = B.plan_buckets(_leaves())
+    assert plan.passthrough == (1, 4)
+    assert plan.n_buckets == 1          # everything fits one default bucket
+    assert plan.bucket_sizes() == [8192 + 6144 + 4096]
+
+
+def test_plan_respects_bucket_cap():
+    # cap of 10240 fp32 elements: leaf0 fills a bucket, leaf2+leaf3 share one
+    plan = B.plan_buckets(_leaves(), bucket_bytes=10240 * 4)
+    assert plan.n_buckets == 2
+    assert plan.bucket_sizes() == [8192, 6144 + 4096]
+    # a tighter cap splits leaf2 and leaf3 apart too
+    assert B.plan_buckets(_leaves(), bucket_bytes=8192 * 4).n_buckets == 3
+    # a leaf larger than the cap still gets (its own) bucket
+    big = [jnp.zeros((1 << 16,), jnp.float32)]
+    assert B.plan_buckets(big, bucket_bytes=1024).n_buckets == 1
+
+
+def test_plan_works_on_abstract_leaves():
+    shapes = [jax.ShapeDtypeStruct((64, 128), jnp.float32),
+              jax.ShapeDtypeStruct((8,), jnp.float32)]
+    plan = B.plan_buckets(shapes)
+    assert plan.n_buckets == 1 and plan.passthrough == (1,)
+
+
+def test_pack_unpack_roundtrip_dtypes_and_shapes():
+    leaves = _leaves()
+    plan = B.plan_buckets(leaves, bucket_bytes=8192 * 4)
+    bufs = B.pack(plan, leaves)
+    assert all(b.dtype == jnp.float32 and b.ndim == 1 for b in bufs)
+    back = B.unpack(plan, bufs, like=leaves)
+    for i, leaf in enumerate(leaves):
+        if i in plan.passthrough:
+            assert back[i] is None      # caller fills passthrough slots
+            continue
+        assert back[i].shape == leaf.shape and back[i].dtype == leaf.dtype
+        assert jnp.allclose(back[i].astype(jnp.float32),
+                            leaf.astype(jnp.float32), atol=1e-2)
+
+
+def test_pack_is_jit_compatible():
+    leaves = _leaves()
+    plan = B.plan_buckets(leaves)
+
+    @jax.jit
+    def roundtrip(ls):
+        return B.unpack(plan, B.pack(plan, ls), like=ls)
+
+    back = roundtrip(leaves)
+    assert jnp.allclose(back[0], leaves[0])
+
+
+# ---------------------------------------------------------------------------
+# Pallas quant dispatch (the transform the buckets feed)
+# ---------------------------------------------------------------------------
+
+def test_collectives_quantize_dispatches_to_pallas():
+    x = jax.random.normal(jax.random.key(1), (8, 512)) * 3
+    with runtime.use_policy(quant_impl="pallas"):
+        qp, sp = C.quantize_int8(x)
+        xp = C.dequantize_int8(qp, sp)
+    with runtime.use_policy(quant_impl="xla"):
+        qj, sj = C.quantize_int8(x)
+        xj = C.dequantize_int8(qj, sj)
+    assert (qp == qj).all() and jnp.allclose(sp, sj)
+    assert jnp.allclose(xp, xj)
+
+
+def test_collectives_quantize_auto_threshold():
+    """auto routes large payloads through the kernel, small through jnp —
+    either way the numbers agree with the reference."""
+    from repro.kernels import ref
+    small = jax.random.normal(jax.random.key(2), (4, 64))
+    large = jax.random.normal(jax.random.key(3), (256, 512))  # >= 1<<16
+    assert large.size >= C.PALLAS_QUANT_MIN_SIZE > small.size
+    with runtime.use_policy(quant_impl="auto"):
+        for x in (small, large):
+            q, s = C.quantize_int8(x)
+            qr, sr = ref.quantize_int8_ref(x)
+            assert (q == qr).all() and jnp.allclose(s, sr)
+
+
+def test_quant_kernel_pads_ragged_rows():
+    from repro.kernels import quant as Q
+    from repro.kernels import ref
+    for N, C_ in [(130, 64), (7, 128), (300, 256), (1, 32)]:
+        x = jax.random.normal(jax.random.key(N), (N, C_)) * 2
+        q, s = Q.quantize_int8(x, block_rows=64)
+        qr, sr = ref.quantize_int8_ref(x)
+        assert q.shape == (N, C_) and s.shape == (N, 1)
+        assert (q == qr).all() and jnp.allclose(s, sr)
+        xd = Q.dequantize_int8(q, s, block_rows=64)
+        assert xd.shape == (N, C_)
+        assert jnp.max(jnp.abs(xd - x)) <= float(jnp.max(s)) + 1e-6

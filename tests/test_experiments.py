@@ -153,6 +153,7 @@ def test_builtin_registrations_cover_all_families():
     assert {"headroom", "stressors", "classes", "inpath",
             "roofline"} <= fams
     assert reg.get("inpath.collectives").requires_devices == 2
+    assert reg.get("inpath.bucketing").requires_devices == 2
 
 
 def test_inpath_skips_on_single_device():
@@ -239,8 +240,70 @@ def test_diff_cli_reports_per_experiment_deltas(tmp_path, capsys):
     assert "r4.ops: added (9)" in out
 
 
-def test_diff_cli_usage_error():
+def test_diff_cli_usage_error(tmp_path):
     assert main(["diff", "only-one.jsonl"]) == 2
+    missing = tmp_path / "missing.jsonl"
+    present = tmp_path / "present.jsonl"
+    write_jsonl([], open(present, "w"))
+    assert main(["diff", str(missing), str(present)]) == 2  # not a traceback
+
+
+def test_diff_threshold_gates_per_metric(tmp_path, capsys):
+    old = [Record("fam.a", "r1", "wall_s_per_call", 1.0),
+           Record("fam.a", "r2", "wire_model", 100.0),
+           Record("fam.a", "r3", "wall_s_per_call", None, skipped=True)]
+    new = [Record("fam.a", "r1", "wall_s_per_call", 1.4),   # +40% (noise)
+           Record("fam.a", "r2", "wire_model", 150.0),      # +50% (real)
+           Record("fam.a", "r3", "wall_s_per_call", None, skipped=True)]
+    po, pn = tmp_path / "old.jsonl", tmp_path / "new.jsonl"
+    write_jsonl(old, open(po, "w"))
+    write_jsonl(new, open(pn, "w"))
+    # within the per-metric noise bound: report only, exit 0
+    assert main(["diff", str(po), str(pn),
+                 "--threshold", "wall_s_per_call=0.5"]) == 0
+    # the tight-model metric violates its 0-tolerance bound: exit 1
+    assert main(["diff", str(po), str(pn),
+                 "--threshold", "wall_s_per_call=0.5",
+                 "--threshold", "wire_model=0.0"]) == 1
+    err = capsys.readouterr().err
+    assert "THRESHOLD EXCEEDED" in err and "r2.wire_model" in err
+    # skipped rows never violate; malformed spec is a usage error
+    assert main(["diff", str(po), str(pn),
+                 "--threshold", "nonsense"]) == 2
+
+
+def test_diff_threshold_direction_gating(tmp_path, capsys):
+    """'+' gates only increases, '-' only drops: a 2x rate improvement must
+    not fail a drop-gated metric, and a wall-time improvement must not fail
+    an increase-gated one."""
+    old = [Record("fam.a", "rate", "ops_per_sec", 100.0),
+           Record("fam.a", "wall", "wall_s_per_call", 2.0)]
+    new = [Record("fam.a", "rate", "ops_per_sec", 250.0),   # 2.5x faster
+           Record("fam.a", "wall", "wall_s_per_call", 0.5)]  # 4x faster
+    po, pn = tmp_path / "old.jsonl", tmp_path / "new.jsonl"
+    write_jsonl(old, open(po, "w"))
+    write_jsonl(new, open(pn, "w"))
+    assert main(["diff", str(po), str(pn),
+                 "--threshold", "ops_per_sec=-0.9",
+                 "--threshold", "wall_s_per_call=+1.0"]) == 0
+    # the same magnitudes in the regression direction DO gate
+    assert main(["diff", str(pn), str(po),
+                 "--threshold", "ops_per_sec=-0.5",
+                 "--threshold", "wall_s_per_call=+1.0"]) == 1
+    err = capsys.readouterr().err
+    assert "rate.ops_per_sec" in err and "wall.wall_s_per_call" in err
+
+
+def test_runner_stamps_git_commit_in_params(temp_experiment):
+    import subprocess
+    sha = subprocess.run(["git", "rev-parse", "HEAD"], capture_output=True,
+                         text=True).stdout.strip()
+    if not sha:
+        pytest.skip("not running inside a git repo")
+    name = temp_experiment("zztest.commitstamp")
+    report = Runner(duration=0.0, only=[name], load_builtin=False,
+                    records_dir=None).run()
+    assert report.records[0].params.get("git_commit") == sha
 
 
 # ---------------------------------------------------------------------------
@@ -260,19 +323,31 @@ def test_wire_bytes_int8_a2a_models_per_block_scales():
     assert a2a < _wire_bytes(n, size, "stock") / 3.9
 
 
-def test_wire_bytes_int8_ring_models_fp32_all_gather():
+def test_wire_bytes_int8_ring_models_compressed_all_gather():
     """``ring_allreduce(wire_int8=True)`` quantizes every reduce-scatter hop
-    but gathers the reduced chunks in fp32 (``all_gather`` of the fp32
-    accumulator) — the model must charge that phase at 4 B/element, not 1."""
+    AND the accumulator before the all-gather — both phases cost
+    ~1 B/element + scales, ~2/8 of the stock fp32 wire at large n."""
     n, size = 4, 1 << 20
     ring = _wire_bytes(n, size, "int8_ring")
     rs_int8 = (n - 1) / n * size + (n - 1) * 4   # int8 chunks + fp32 scales
-    ag_fp32 = (n - 1) / n * size * 4             # fp32 gather phase
-    assert ring == int(rs_int8 + ag_fp32)
-    # still cheaper than the fp32 wire (5/8 of stock), but no longer the
-    # seed's both-phases-int8 fiction (~2/8)
+    ag_int8 = (n - 1) / n * size + (n - 1) * 4   # int8 gather + fp32 scales
+    assert ring == int(rs_int8 + ag_int8)
     stock = _wire_bytes(n, size, "stock")
-    assert 0.6 * stock < ring < 0.65 * stock
+    assert 0.24 * stock < ring < 0.26 * stock    # ~2/8 of stock
+    # matches the a2a formulation exactly (same payload+scale schedule)
+    assert ring == _wire_bytes(n, size, "int8_a2a")
+
+
+def test_wire_bytes_int8_pairwise_models_full_payload_hops():
+    """``pairwise_int8_allreduce`` never chunks: each of the n-1 hops ships
+    the whole int8 payload plus one rowwise fp32 scale."""
+    n, size = 4, 1 << 20
+    pw = _wire_bytes(n, size, "int8_pairwise")
+    assert pw == int((n - 1) * (size + 4))
+    # cheaper than the fp32 wire at small n, worse than the chunked int8
+    # forms at large n — the crossover the planner cares about
+    assert pw < _wire_bytes(n, size, "stock")
+    assert pw > _wire_bytes(n, size, "int8_ring")
 
 
 # ---------------------------------------------------------------------------
