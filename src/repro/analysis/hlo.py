@@ -229,6 +229,21 @@ class CollectiveSummary:
                 "by_kind": self.by_kind, "n_ops": self.n_ops}
 
 
+def collective_counts(ops: list[CollectiveOp]) -> dict[str, float]:
+    """Trip-count-weighted collective-instruction counts by kind.
+
+    The overlap scheduler's invariant (see ``parallel/overlap.py``) is
+    that a schedule changes only *dependency structure*: the pipelined
+    graph must issue exactly the collectives the serial one does — no
+    chain duplicated by a rematerialized pack, none fused away or CSE'd.
+    Comparing these dicts between two compiled modules is how the HLO
+    schedule test pins that down."""
+    out: dict[str, float] = {}
+    for op in ops:
+        out[op.kind] = out.get(op.kind, 0.0) + op.count
+    return out
+
+
 def summarize(ops: list[CollectiveOp]) -> CollectiveSummary:
     """Totals use the TPU-dtype-corrected wire bytes; raw CPU-promoted
     bytes are kept in ``raw_wire_bytes`` for reference."""

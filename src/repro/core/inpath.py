@@ -21,8 +21,15 @@ the profitability rule: a multi-leaf gradient tree reduced leaf-wise (one
 collective chain per leaf) vs bucketed (one chain per fusion buffer plus
 one grouped pmean), with trace-time chain counts and wall time per step.
 
+A third, ``inpath.headroom_overlap``, is the jax_pallas analogue of the
+paper's headroom-during-transfer tables: how much of a synthetic compute
+kernel's idle FLOP/s survives while a collective is in flight, serial
+(compute gated on the transfer) vs overlapped (dependency-free staging,
+``parallel/overlap.py``), per method.
+
 Emits the unified ``Record`` schema; ``relative`` is the slowdown vs the
-stock stack (stock == 1.0; for bucketing, vs the leaf-wise path).
+stock stack (stock == 1.0; for bucketing, vs the leaf-wise path; for
+headroom_overlap, the overlapped step vs the serial one).
 """
 from __future__ import annotations
 
@@ -35,9 +42,11 @@ from repro.experiments.measure import measure as _measure
 from repro.experiments.record import Record
 from repro.parallel import collectives as C
 from repro.parallel import compat
+from repro.parallel import overlap as O
 
 EXPERIMENT = "inpath.collectives"
 EXPERIMENT_BUCKETING = "inpath.bucketing"
+EXPERIMENT_OVERLAP = "inpath.headroom_overlap"
 
 SCALE_BYTES = 4  # fp32 quantization scale carried per compressed block
 
@@ -171,3 +180,161 @@ def measure_bucketing(duration: float = 0.3,
         leafwise = run(False)
         bucketed = run(True, base=leafwise.value)
     return [leafwise, bucketed]
+
+
+# ---------------------------------------------------------------------------
+# headroom during transfer: compute FLOP/s with a collective in flight
+# ---------------------------------------------------------------------------
+
+# "ring" rides along with the four wire variants: it is the chunked method
+# with no quantize transform, so it shows the *schedule* effect cleanest
+# on core-starved hosts (see measure_headroom_overlap's docstring).
+OVERLAP_METHODS = ("stock", "int8_a2a", "int8_ring", "int8_pairwise", "ring")
+
+OVERLAP_BUCKETS = 4          # gradient leaves == fusion buckets in the rig
+OVERLAP_BUCKET_ELEMS = 1 << 17
+
+
+def _paired_ratio(f_serial, f_over, args, duration: float, calls: int = 2):
+    """``t_overlapped / t_serial`` as a ratio of per-arm *medians* over
+    alternating serial/overlapped segments (``calls`` timed calls apiece).
+
+    Interleaving the arms round by round cancels the slow load drift a
+    shared 2-core container exhibits, and the per-arm median discards the
+    stall-inflated segments a single co-tenant hiccup produces (a stall
+    lands in one arm's segment, not both — a plain per-round ratio would
+    keep it).  Returns ``(ratio, t_serial_med, t_over_med, rounds)``."""
+    jax.block_until_ready(f_serial(*args))     # compile both arms
+    jax.block_until_ready(f_over(*args))
+    import statistics
+    import time as _time
+    ts, to = [], []
+    deadline = _time.perf_counter() + max(2 * duration, 0.2)
+    while _time.perf_counter() < deadline or len(ts) < 3:
+        t0 = _time.perf_counter()
+        for _ in range(calls):
+            out = f_serial(*args)
+        jax.block_until_ready(out)
+        t1 = _time.perf_counter()
+        for _ in range(calls):
+            out = f_over(*args)
+        jax.block_until_ready(out)
+        t2 = _time.perf_counter()
+        ts.append((t1 - t0) / calls)
+        to.append((t2 - t1) / calls)
+    ts_med, to_med = statistics.median(ts), statistics.median(to)
+    return to_med / ts_med, ts_med, to_med, len(ts)
+
+
+def measure_headroom_overlap(duration: float = 0.3,
+                             n_buckets: int = OVERLAP_BUCKETS,
+                             bucket_elems: int = OVERLAP_BUCKET_ELEMS,
+                             compute_dim: int = 192,
+                             compute_iters: int = 12) -> list[Record]:
+    """The paper's headroom-during-transfer tables, on our wire.
+
+    One step reduces an ``n_buckets``-leaf gradient tree (one fusion
+    bucket per leaf, the tentpole's bucketed chains) next to a synthetic
+    compute kernel (``compute_iters`` chained (d x d) matmuls standing in
+    for the backward segments that overlap bucket chains in a real step).
+    Two schedules (``parallel/overlap.py``): *serial* issues one chain at
+    a time and gates the compute's inputs on the reduction's output
+    (transfer, then process — one stream); *overlapped* pipelines the
+    chains and leaves the compute dependency-free, so the scheduler can
+    run processing while a transfer is in flight.
+
+    ``overlap_efficiency = t_overlapped / t_serial`` per method (< 1.0
+    means overlap recovered headroom; each method's serial arm is its own
+    baseline, so the ratio isolates scheduling from wire format), measured
+    as a ratio of per-arm medians over interleaved segments (noise-robust
+    on shared hosts).  Params carry the idle vs in-flight FLOP/s of the compute
+    kernel — the paper's "how much processing survives the transfer"
+    number.  Expect the effect to concentrate where the wire transform
+    leaves cores idle (``stock``/``ring``); the int8 transforms *spend*
+    the headroom compression buys back — the BlueField-2 lesson (its ARM
+    cores could not keep up with the link) at schedule granularity.
+    ``int8_pairwise`` stays serial on the chain side (its leaf-wise,
+    shape-preserving exchanges have no pack stage to pipeline), so its
+    overlapped arm frees only the compute.
+    """
+    n = len(jax.devices())
+    if n < 2:
+        raise RuntimeError("headroom-overlap measurement needs >= 2 devices "
+                           "(run under --xla_force_host_platform_device_count)")
+    mesh = compat.make_mesh((n,), ("pod",))
+    d = compute_dim
+    ks = jax.random.split(jax.random.key(0), n_buckets)
+    tree = {f"w{i}": jax.random.normal(k, (n, bucket_elems), jnp.float32)
+            for i, k in enumerate(ks)}
+    want = {k: jnp.mean(v, axis=0, keepdims=True) for k, v in tree.items()}
+    specs = jax.tree_util.tree_map(lambda _: P("pod"), tree)
+    a = jax.random.normal(jax.random.key(9), (n, d, d), jnp.float32) / d
+    flops = compute_iters * 2 * d ** 3   # per device, matmuls only
+
+    def synth_compute(m):
+        def body(c, _):
+            return jnp.tanh(c @ m), None
+        out, _ = jax.lax.scan(body, m, None, length=compute_iters)
+        return out
+
+    def reduce_tree(t, method, overlapped):
+        if method == "stock":
+            return C.reduce_gradients(t, "pod", "stock")[0]
+        return C.reduce_gradients(t, "pod", method, None,
+                                  bucketed=None if method == "int8_pairwise"
+                                  else True,
+                                  bucket_bytes=bucket_elems * 4,
+                                  overlap=overlapped)[0]
+
+    def step(method, overlapped):
+        def fn(t, m):
+            return O.overlap_compute(
+                lambda: reduce_tree(t, method, overlapped),
+                synth_compute, m, overlap=overlapped)
+        return jax.jit(compat.shard_map(
+            fn, mesh=mesh, in_specs=(specs, P("pod")),
+            out_specs=(specs, P("pod")), check=False))
+
+    records = []
+    # the compute kernel alone: the idle-FLOP/s reference
+    fc = jax.jit(compat.shard_map(synth_compute, mesh=mesh,
+                                  in_specs=P("pod"), out_specs=P("pod"),
+                                  check=False))
+    fc(a)
+    t_idle = _measure(lambda: fc(a), duration).s_per_call
+    records.append(Record(
+        EXPERIMENT_OVERLAP, "compute_idle", "flops_per_s", flops / t_idle,
+        unit="flop/s", relative=1.0,
+        params={"compute_dim": d, "compute_iters": compute_iters,
+                "flops": flops, "devices": n, "wall_s_per_call": t_idle}))
+
+    # pin the transform impl: this experiment isolates the *schedule*, not
+    # the kernel placement (cf. bucketing); the schedule itself is pinned
+    # per arm through reduce_gradients(overlap=...)
+    with runtime.use_policy(quant_impl="xla"):
+        for method in OVERLAP_METHODS:
+            f_serial = step(method, overlapped=False)
+            f_over = step(method, overlapped=True)
+            out = f_over(tree, a)          # correctness probe, both arms
+            err = max(float(jnp.max(jnp.abs(out[0][k] - want[k])))
+                      for k in tree)
+            outs = f_serial(tree, a)
+            err = max(err, max(float(jnp.max(jnp.abs(outs[0][k] - want[k])))
+                               for k in tree))
+            eff, t_serial, t_over, rounds = _paired_ratio(
+                f_serial, f_over, (tree, a), duration)
+            records.append(Record(
+                EXPERIMENT_OVERLAP, method, "overlap_efficiency", eff,
+                unit="x", relative=eff,
+                params={"t_serial_s": t_serial, "t_overlapped_s": t_over,
+                        "t_compute_idle_s": t_idle,
+                        "flops_per_s_idle": flops / t_idle,
+                        "flops_per_s_in_flight": flops / t_over,
+                        "paired_rounds": rounds,
+                        "max_error": err,
+                        "wire_bytes_per_device": n_buckets * _wire_bytes(
+                            n, bucket_elems, method),
+                        "n_buckets": n_buckets,
+                        "bucket_elems": bucket_elems, "devices": n,
+                        "compute_dim": d, "compute_iters": compute_iters}))
+    return records

@@ -31,6 +31,11 @@ class OffloadPlan:
     dp_method: str = "stock"
     use_quant_kernel: bool = False
     dp_bucket_bytes: Optional[int] = None   # bucket-granularity compression
+    dp_overlap: Optional[bool] = None       # bucket-chain schedule: True =
+    #                                 software-pipelined (chain i in flight
+    #                                 while bucket i+1 packs), False =
+    #                                 strictly serial, None = auto at trace
+    #                                 time (pipeline when >1 bucket)
     remat: str = "full"
     microbatches: int = 1
     notes: list = field(default_factory=list)
@@ -40,7 +45,8 @@ class OffloadPlan:
 def make_plan(terms: RooflineTerms, stressor_records: Iterable[Record],
               multi_pod: bool = True,
               bytes_per_device: Optional[float] = None,
-              hbm_bytes: float = 16e9) -> OffloadPlan:
+              hbm_bytes: float = 16e9,
+              grad_bytes: Optional[float] = None) -> OffloadPlan:
     """Decide the offload configuration from the roofline terms plus the
     unified ``Record`` stream of the stressor suite (``stressors.suite``
     rows, as emitted by the experiment Runner or read back from JSONL)."""
@@ -66,6 +72,21 @@ def make_plan(terms: RooflineTerms, stressor_records: Iterable[Record],
                           "per leaf (paper sec. III-B3: transparent "
                           "compression is a profitable offload only while "
                           "the transform keeps up with the link)")
+        # rule 1b: overlap the bucket chains only when there will be more
+        # than one — a single chain has nothing to pipeline against (the
+        # paper's headroom-during-transfer: compute is free only while a
+        # transfer is actually in flight).  Without a gradient-size
+        # estimate, leave the trace-time auto rule (same >1-bucket cutoff,
+        # resolved against the real bucket plan) in charge.
+        if grad_bytes is not None:
+            n_buckets = -(-int(grad_bytes) // plan.dp_bucket_bytes)
+            plan.dp_overlap = n_buckets > 1
+            plan.notes.append(
+                f"~{n_buckets} gradient bucket(s) at "
+                f"{plan.dp_bucket_bytes >> 20} MiB: bucket-chain overlap "
+                + ("ON (pipelined schedule hides pack/quantize behind the "
+                   "in-flight exchange)" if plan.dp_overlap else
+                   "left serial (single chain, nothing to overlap)"))
     else:
         plan.notes.append("in-path compression NOT enabled "
                           "(paper sec. II-B1: don't add work to a saturated "

@@ -15,6 +15,9 @@ Every run also persists its Record stream as JSONL under
 turns it off), with each Record stamped with the producing git commit;
 ``diff`` compares two persisted streams per experiment and exits nonzero
 when a ``--threshold``-gated metric moves more than its noise bound.
+Either ``diff`` argument may be a directory of ``*.jsonl`` streams — CI
+diffs each push against the curated ``experiments/records/baseline/``
+directory as well as the previous commit.
 """
 from __future__ import annotations
 
@@ -29,11 +32,12 @@ def _parse(argv) -> argparse.Namespace:
     ap = argparse.ArgumentParser(
         prog="python -m repro.experiments",
         description="Run paper characterization experiments.",
-        epilog="subcommand: 'diff OLD.jsonl NEW.jsonl [--threshold "
+        epilog="subcommand: 'diff OLD NEW [--threshold "
                "METRIC=[+|-]REL ...]' compares two persisted Record streams "
-               "per experiment; --threshold gates that metric's relative "
-               "delta (+ = increases only, - = drops only) and flips the "
-               "exit status when exceeded.")
+               "per experiment (each argument a .jsonl file or a directory "
+               "of them, e.g. experiments/records/baseline); --threshold "
+               "gates that metric's relative delta (+ = increases only, "
+               "- = drops only) and flips the exit status when exceeded.")
     ap.add_argument("--only", default=None,
                     help="comma-separated experiment names or family "
                          "prefixes (e.g. 'headroom,stressors.suite')")

@@ -76,6 +76,15 @@ def _inpath_bucketing(*, duration: float) -> Iterable[Record]:
     return inpath.measure_bucketing(duration=duration)
 
 
+@experiment("inpath.headroom_overlap", classes=("NETWORK", "CPU"),
+            requires_devices=2, figure="Tables IV/V (headroom in transfer)",
+            description="compute FLOP/s with a collective in flight: "
+                        "serial vs overlapped schedule per method")
+def _inpath_headroom_overlap(*, duration: float) -> Iterable[Record]:
+    from repro.core import inpath
+    return inpath.measure_headroom_overlap(duration=duration)
+
+
 @experiment("roofline.table", figure="roofline table",
             description="three-term roofline of compiled dry-run cells")
 def _roofline(*, duration: float) -> Iterable[Record]:

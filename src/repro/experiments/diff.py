@@ -12,6 +12,13 @@ relative delta is printed, and rows only in one stream are reported as
 added/removed.  SKIP/ERROR flag changes are called out explicitly (a row
 silently flipping to skipped is how coverage regressions hide).
 
+Either stream argument may also be a *directory*: its ``*.jsonl`` files
+are read in sorted order and concatenated (later files win on repeated
+keys).  That is how the curated baseline works — CI diffs a fresh run
+against ``experiments/records/baseline/``, a small hand-kept stream per
+release rather than just the previous commit, so a regression that
+creeps in over many commits still trips the gate.
+
 Without thresholds this is a *report*: exit status is 0 whenever both
 files parse.  ``--threshold METRIC=[+|-]REL`` turns it into a *gate* for
 that metric: a row whose relative delta ``(new-old)/|old|`` exceeds REL in
@@ -40,6 +47,23 @@ def _index(records: Iterable[Record]) -> dict[Key, Record]:
     for r in records:   # last row wins for a repeated key
         out[(r.experiment, r.name, r.metric)] = r
     return out
+
+
+def read_stream(path: str) -> dict[Key, Record]:
+    """Index one stream argument: a JSONL file, or a directory whose
+    ``*.jsonl`` files are concatenated in sorted order (the curated
+    baseline layout, ``experiments/records/baseline/``)."""
+    if os.path.isdir(path):
+        names = sorted(n for n in os.listdir(path) if n.endswith(".jsonl"))
+        if not names:
+            raise OSError(f"{path}: directory holds no .jsonl streams")
+        out: dict[Key, Record] = {}
+        for n in names:
+            with open(os.path.join(path, n)) as fh:
+                out.update(_index(read_jsonl(fh)))
+        return out
+    with open(path) as fh:
+        return _index(read_jsonl(fh))
 
 
 def _fmt_val(v) -> str:
@@ -187,8 +211,10 @@ def main(argv: list[str]) -> int:
         else:
             paths.append(a)
     if len(paths) != 2:
-        print("usage: python -m repro.experiments diff OLD.jsonl NEW.jsonl "
-              "[--threshold METRIC=[+|-]REL ...]", file=sys.stderr)
+        print("usage: python -m repro.experiments diff OLD NEW "
+              "[--threshold METRIC=[+|-]REL ...]\n"
+              "  OLD/NEW: a Record-stream .jsonl file, or a directory of "
+              "them (e.g. experiments/records/baseline)", file=sys.stderr)
         return 2
     try:
         thresholds = _parse_thresholds(thr_args)
@@ -197,9 +223,8 @@ def main(argv: list[str]) -> int:
         return 2
     try:
         try:
-            with open(paths[0]) as fo, open(paths[1]) as fn:
-                oidx = _index(read_jsonl(fo))
-                nidx = _index(read_jsonl(fn))
+            oidx = read_stream(paths[0])
+            nidx = read_stream(paths[1])
         except OSError as e:
             print(f"diff: cannot read stream: {e}", file=sys.stderr)
             return 2

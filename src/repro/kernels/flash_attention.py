@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.quant import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -62,8 +64,15 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
 
 def flash_attention_fwd(q, k, v, *, causal=True, window=0, sm_scale=None,
-                        block_q=128, block_k=128, interpret=True):
-    """q: (B, S, H, hd); k, v: (B, S, Kv, hd) -> (B, S, H, hd)."""
+                        block_q=128, block_k=128, interpret=None):
+    """q: (B, S, H, hd); k, v: (B, S, Kv, hd) -> (B, S, H, hd).
+
+    ``interpret=None`` resolves per backend (compiled Mosaic on TPU/GPU,
+    interpreter on CPU — ``kernels.quant.resolve_interpret``); the seed's
+    hardcoded ``interpret=True`` default ran the interpreter even on
+    backends with a real lowering.  Policy-routed callers go through
+    ``kernels/ops.py``, which passes the resolved value explicitly."""
+    interpret = resolve_interpret(interpret)
     B, S, H, hd = q.shape
     Kv = k.shape[2]
     rep = H // Kv

@@ -37,18 +37,38 @@ def use_pallas_quant(size: int) -> bool:
                                 and size >= _q.PALLAS_QUANT_MIN_SIZE)
 
 
-@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
-def flash_attention(q, k, v, *, causal=True, window=0,
-                    block_q=128, block_k=128):
+# The runtime policy is resolved OUTSIDE the jitted inner functions and
+# threaded through as a static argument: a jit cache keys on avals and
+# statics only, so a policy read *inside* the traced body (the previous
+# shape of these wrappers) is frozen into the first trace — flipping
+# ``runtime.policy()`` with an already-seen shape silently reused the
+# stale dispatch.  With ``interpret`` static, a flip is a new cache entry
+# and retraces (regression-tested in test_kernels.py).
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def _flash_attention(q, k, v, *, causal, window, block_q, block_k,
+                     interpret):
     return _fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
                                    block_q=block_q, block_k=block_k,
-                                   interpret=_interp())
+                                   interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("chunk",))
-def rwkv6_scan(r, k, v, w, u, s0=None, *, chunk=64):
+def flash_attention(q, k, v, *, causal=True, window=0,
+                    block_q=128, block_k=128):
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            block_q=block_q, block_k=block_k,
+                            interpret=_interp())
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _rwkv6_scan(r, k, v, w, u, s0, *, chunk, interpret):
     return _rs.rwkv6_scan_fwd(r, k, v, w, u, s0, chunk=chunk,
-                              interpret=_interp())
+                              interpret=interpret)
+
+
+def rwkv6_scan(r, k, v, w, u, s0=None, *, chunk=64):
+    return _rwkv6_scan(r, k, v, w, u, s0, chunk=chunk, interpret=_interp())
 
 
 # NOTE: unlike the attention/rwkv wrappers these are deliberately NOT

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.quant import resolve_interpret
+
 CLIP = 30.0
 
 
@@ -63,10 +65,15 @@ def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
         sT_ref[...] = S
 
 
-def rwkv6_scan_fwd(r, k, v, w, u, s0=None, *, chunk=64, interpret=True):
+def rwkv6_scan_fwd(r, k, v, w, u, s0=None, *, chunk=64, interpret=None):
     """r,k,v,w: (B, T, H, dh) fp32; u: (H, dh); s0: (B, H, dh, dh) or None.
 
-    Returns (y (B,T,H,dh) fp32, S_T (B,H,dh,dh) fp32)."""
+    Returns (y (B,T,H,dh) fp32, S_T (B,H,dh,dh) fp32).
+
+    ``interpret=None`` resolves per backend (``resolve_interpret``):
+    compiled where Pallas has a real lowering, interpreter on CPU — the
+    seed hardcoded ``True`` and interpreted everywhere."""
+    interpret = resolve_interpret(interpret)
     B, T, H, dh = r.shape
     chunk = min(chunk, T)
     assert T % chunk == 0, (T, chunk)

@@ -79,6 +79,8 @@ def main():
         remat=False,
         opt=OptConfig(lr=args.lr, warmup_steps=20,
                       decay_steps=max(args.steps, 21)))
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(
+        jax.eval_shape(lambda: registry.init_params(cfg, jax.random.key(0)))))
     if args.plan:
         from repro.core.headroom import RooflineTerms
         from repro.core.planner import make_plan
@@ -87,14 +89,16 @@ def main():
         plan = make_plan(RooflineTerms(d["compute_s"], d["memory_s"],
                                        d["collective_s"]),
                          run_suite(duration=0.1),
-                         multi_pod="pod" in mesh.axis_names)
+                         multi_pod="pod" in mesh.axis_names,
+                         # gradients cross the pod axis as fp32 bucket
+                         # buffers — the planner's bucket-count (and so
+                         # overlap) estimate keys on this
+                         grad_bytes=4 * n_params)
         print("[plan]", *plan.notes, sep="\n  ")
         opts = dataclasses.replace(opts, dp_method=plan.dp_method
                                    if "pod" in mesh.axis_names else "stock",
-                                   microbatches=plan.microbatches)
-
-    n_params = sum(x.size for x in jax.tree_util.tree_leaves(
-        jax.eval_shape(lambda: registry.init_params(cfg, jax.random.key(0)))))
+                                   microbatches=plan.microbatches,
+                                   dp_overlap=plan.dp_overlap)
     print(f"[train] arch={cfg.name} params={n_params/1e6:.1f}M "
           f"devices={len(jax.devices())} mesh={dict(mesh.shape)}")
 

@@ -79,12 +79,20 @@ def plan_buckets(leaves: Sequence, *,
     return BucketPlan(tuple(buckets), tuple(passthrough), len(leaves))
 
 
+def pack_bucket(plan: BucketPlan, i: int, leaves: Sequence) -> jnp.ndarray:
+    """Concatenate bucket ``i``'s leaves into one flat fp32 buffer.
+
+    Split out of ``pack`` so a schedule (``parallel/overlap.py``) can
+    materialize buckets one at a time — the pipelined schedule packs
+    bucket ``i+1`` while bucket ``i``'s collective chain is in flight."""
+    return jnp.concatenate(
+        [jnp.reshape(leaves[s.leaf], (-1,)).astype(jnp.float32)
+         for s in plan.buckets[i]])
+
+
 def pack(plan: BucketPlan, leaves: Sequence) -> list:
     """Concatenate each bucket's leaves into one flat fp32 buffer."""
-    return [jnp.concatenate(
-        [jnp.reshape(leaves[s.leaf], (-1,)).astype(jnp.float32)
-         for s in bucket])
-        for bucket in plan.buckets]
+    return [pack_bucket(plan, i, leaves) for i in range(plan.n_buckets)]
 
 
 def unpack(plan: BucketPlan, buffers: Sequence,

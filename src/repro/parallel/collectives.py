@@ -21,7 +21,10 @@ above ``PALLAS_QUANT_MIN_SIZE`` (``quant_impl="auto"``, the default) and
 resolves compiled vs interpreted per backend.  ``reduce_gradients`` fuses the
 gradient tree into a few bucket buffers (``parallel/buckets.py``) so a
 multi-leaf tree costs one collective chain per *bucket* plus one grouped
-``pmean`` for the small passthrough leaves, instead of one chain per leaf.
+``pmean`` for the small passthrough leaves, instead of one chain per leaf;
+chain issue order is a *schedule* (``parallel/overlap.py``): strictly
+serial, or software-pipelined so bucket ``i``'s exchange is in flight
+while bucket ``i+1`` packs.
 
 All functions run inside ``shard_map`` with the target axis manual.
 """
@@ -36,6 +39,7 @@ from repro.kernels.quant import PALLAS_QUANT_MIN_SIZE  # noqa: F401 — the
 #   auto-dispatch threshold, re-exported for callers/tests of this module
 from repro.parallel import buckets as B
 from repro.parallel import compat
+from repro.parallel import overlap as O
 
 DEFAULT_BUCKET_BYTES = B.DEFAULT_BUCKET_BYTES
 MIN_COMPRESS_SIZE = B.MIN_COMPRESS_SIZE
@@ -282,7 +286,8 @@ def _grouped_pmean(leaves, axis_name: str):
 
 def reduce_gradients(grads, axis_name: str, method: str = "stock",
                      errors=None, *, bucketed: Optional[bool] = None,
-                     bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+                     bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                     overlap: Optional[bool] = None):
     """Cross-'pod' gradient reduction with error feedback.
 
     method: stock | int8_a2a | int8_ring | int8_pairwise | ring.
@@ -298,6 +303,17 @@ def reduce_gradients(grads, axis_name: str, method: str = "stock",
     (packing would reintroduce the cross-auto-axis gather it avoids).
     ``bucketed=False`` keeps the legacy leaf-wise chains — measured
     against the bucketed path by the ``inpath.bucketing`` experiment.
+
+    ``overlap`` picks the bucket-chain schedule (``parallel/overlap.py``):
+    False issues chains strictly one at a time (bucket ``i+1`` packs only
+    after chain ``i`` has dequantized), True software-pipelines them
+    (chain ``i`` in flight while bucket ``i+1`` packs), and None defers
+    to ``runtime.policy()["overlap_schedule"]`` — whose ``auto`` default
+    pipelines exactly when the plan yields more than one bucket.  Both
+    schedules issue identical collectives (the HLO schedule test holds
+    counts and wire bytes equal); only the dependency structure differs.
+    Ignored on the leaf-wise path, whose chains are per-leaf and have no
+    pack stage to hide.
     """
     if bucketed is None:
         bucketed = method != "int8_pairwise"
@@ -312,7 +328,7 @@ def reduce_gradients(grads, axis_name: str, method: str = "stock",
 
     if bucketed:
         outs, ress = _reduce_bucketed(flat, eflat, axis_name, method,
-                                      bucket_bytes)
+                                      bucket_bytes, overlap)
     else:
         outs, ress = _reduce_leafwise(flat, eflat, axis_name, method)
     return (jax.tree_util.tree_unflatten(treedef, outs),
@@ -335,18 +351,27 @@ def _reduce_leafwise(flat, eflat, axis_name: str, method: str):
 
 
 def _reduce_bucketed(flat, eflat, axis_name: str, method: str,
-                     bucket_bytes: int):
+                     bucket_bytes: int, overlap: Optional[bool] = None):
     """One collective chain per fusion bucket; error feedback is packed
-    into the buckets and the residual scattered back per leaf."""
+    into the buckets and the residual scattered back per leaf.  Chain
+    issue order is a schedule (``parallel/overlap.py``): serial gates
+    bucket ``i+1``'s pack on chain ``i``'s output, pipelined co-stages
+    them dependency-free so the exchange can be in flight while the next
+    bucket packs."""
     plan = B.plan_buckets(flat, bucket_bytes=bucket_bytes,
                           min_compress_size=MIN_COMPRESS_SIZE)
-    bufs = B.pack(plan, flat)
-    ebufs = B.pack(plan, eflat)
-    red, res = [], []
-    for buf, ebuf in zip(bufs, ebufs):
-        o, r = _chain(buf + ebuf, axis_name, method)
-        red.append(o)
-        res.append(r)
+    overlap = O.resolve_overlap(overlap, plan.n_buckets)
+
+    def pack_one(i):
+        # gradient bucket + its error-feedback bucket, fused at pack time
+        # so the schedule sees one buffer per stage
+        return B.pack_bucket(plan, i, flat) + B.pack_bucket(plan, i, eflat)
+
+    chains = O.run_schedule(
+        plan.n_buckets, pack_one,
+        lambda buf: _chain(buf, axis_name, method), overlap)
+    red = [o for o, _ in chains]
+    res = [r for _, r in chains]
     outs = B.unpack(plan, red, like=flat)
     ress = B.unpack(plan, res, like=eflat)
     if plan.passthrough:

@@ -1,0 +1,176 @@
+"""Overlap scheduler: software-pipelined bucket-chain issue order.
+
+The paper's central measurement is how much *processing headroom* remains
+while a transfer is in flight — the BlueField-2's cores cannot sustain
+half of line rate once packet handling and computation contend.  Our
+analogue of "the transfer" is a bucket's collective chain
+(quantize→exchange→dequantize, ``parallel/collectives.py``); the analogue
+of "the processing" is everything the step could be doing meanwhile —
+packing the next bucket, the remaining backward segments, the optimizer.
+
+A *schedule* here is pure dependency structure.  XLA orders ops by
+dataflow, so the only way to pin an issue order is to add (or withhold)
+data dependencies, which we do with ``jax.lax.optimization_barrier``:
+
+``serial``
+    Bucket *i+1* may not even pack until bucket *i*'s chain has fully
+    dequantized: an explicit cross-bucket edge from chain *i*'s output to
+    pack *i+1*'s input.  This is the single-stream hardware model — one
+    transfer in flight at a time — and the baseline the
+    ``inpath.headroom_overlap`` experiment measures against.
+
+``pipelined``
+    Bucket *i*'s chain and bucket *i+1*'s pack are staged together
+    (one barrier groups them) with **no** cross-chain data dependency, so
+    a latency-hiding scheduler — XLA:CPU's concurrent thunk executor,
+    the TPU async-collective scheduler — is free to run bucket *i+1*'s
+    pack/quantize while bucket *i*'s exchange is on the wire.
+
+Both schedules issue exactly the same collectives in the same count (the
+HLO schedule test in tier-1 checks this): overlap must never duplicate or
+elide a chain, only relax its ordering.
+
+``resolve_overlap`` turns the three-way knob (explicit argument >
+``runtime.policy()["overlap_schedule"]`` > auto) into a bool; auto enables
+the pipeline only when there is more than one bucket — with a single
+chain there is nothing to overlap it with, and the barrier-free graph
+would be identical anyway.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+
+from repro import runtime
+
+
+# ---------------------------------------------------------------------------
+# dependency edges
+# ---------------------------------------------------------------------------
+
+def probe(tree) -> jax.Array:
+    """A scalar dependency handle on ``tree`` — the cheapest value that is
+    data-dependent on it (first element of its first leaf), used as the
+    serializing edge so barriers never carry whole payloads around."""
+    leaf = jax.tree_util.tree_leaves(tree)[0]
+    return jax.numpy.reshape(leaf, (-1,))[0]
+
+
+def probe_all(tree) -> tuple:
+    """One scalar handle per leaf of ``tree`` — the full-result gate.
+    ``probe`` suffices when the edge targets a single producer (one
+    chain's output); gating on a *multi-chain* result needs every leaf,
+    or the dependency covers only the first chain issued."""
+    return tuple(jax.numpy.reshape(leaf, (-1,))[0]
+                 for leaf in jax.tree_util.tree_leaves(tree))
+
+
+def after(x, *deps):
+    """``x`` (any pytree), gated on every ``dep``: consumers of the result
+    cannot be scheduled before all ``deps`` are computed
+    (optimization_barrier semantics — values pass through unchanged)."""
+    if not deps:
+        return x
+    leaves, treedef = jax.tree_util.tree_flatten(x)
+    out = jax.lax.optimization_barrier(tuple(leaves) + tuple(deps))
+    return jax.tree_util.tree_unflatten(treedef, out[:len(leaves)])
+
+
+def staged(*xs):
+    """Group ``xs`` into one pipeline stage: none of them may be sunk past
+    (or hoisted above) the barrier, so a scheduler sees them become ready
+    together — the "issue chain i while bucket i+1 packs" pairing.  Values
+    pass through unchanged."""
+    if len(xs) == 1:
+        return xs
+    return jax.lax.optimization_barrier(tuple(xs))
+
+
+# ---------------------------------------------------------------------------
+# schedule resolution
+# ---------------------------------------------------------------------------
+
+def resolve_overlap(overlap: Optional[bool], n_buckets: int) -> bool:
+    """Explicit argument > ``runtime.policy()["overlap_schedule"]`` > auto.
+
+    Auto pipelines only multi-bucket trees: a single chain has nothing to
+    overlap with (the planner rule — ``OffloadPlan.dp_overlap`` — applies
+    the same cutoff from its side)."""
+    if overlap is not None:
+        return bool(overlap)
+    mode = runtime.policy().get("overlap_schedule", "auto")
+    if mode == "serial":
+        return False
+    if mode == "pipelined":
+        return True
+    if mode != "auto":
+        raise ValueError(f"overlap_schedule policy {mode!r} "
+                         "(want auto | serial | pipelined)")
+    return n_buckets > 1
+
+
+# ---------------------------------------------------------------------------
+# the schedules
+# ---------------------------------------------------------------------------
+
+def run_schedule(n: int, pack: Callable[[int], jax.Array],
+                 exchange: Callable[[jax.Array], tuple],
+                 overlap: bool) -> list:
+    """Issue ``n`` pack→exchange chains under the chosen schedule.
+
+    ``pack(i)`` materializes bucket ``i``'s fused buffer; ``exchange(buf)``
+    runs its collective chain and may return any pytree.  Returns the list
+    of ``exchange`` results in bucket order — identical values under both
+    schedules, only the dependency structure differs.
+    """
+    outs: list = []
+    if n == 0:        # every leaf below the compress threshold: nothing
+        return outs   # to schedule (the grouped pmean is the caller's)
+    if not overlap:
+        done = None
+        for i in range(n):
+            buf = pack(i)
+            if done is not None:
+                # chain i's dequantized output gates bucket i+1's pack:
+                # one transfer in flight at a time
+                buf = after(buf, done)
+            out = exchange(buf)
+            outs.append(out)
+            done = probe(out)
+        return outs
+
+    # software pipeline: pack bucket 0, then co-stage (chain i, pack i+1)
+    nxt = pack(0)
+    for i in range(n):
+        buf = nxt
+        if i + 1 < n:
+            nxt = pack(i + 1)
+            # pack i+1 is ready by the time chain i issues, and nothing
+            # ties chain i's completion to it — the exchange can be in
+            # flight while the next bucket packs and quantizes
+            buf, nxt = staged(buf, nxt)
+        outs.append(exchange(buf))
+    return outs
+
+
+def overlap_compute(collective: Callable[[], tuple],
+                    compute: Callable, compute_inputs,
+                    overlap: bool) -> tuple:
+    """One collective beside one compute payload — the
+    headroom-during-transfer shape (``inpath.headroom_overlap``).
+
+    ``collective()`` is a thunk; ``compute(compute_inputs)`` consumes its
+    inputs *through this function* so the serial arm can gate them.
+    Serial: the compute's inputs are barriered on *every leaf* of the
+    collective's output (a multi-chain result needs every chain's edge,
+    not just the first one issued), so no compute op may be scheduled
+    until the whole transfer has landed (transfer, then process — the
+    single-stream model).  Overlapped: the two are dependency-free and a
+    concurrent scheduler can hide the shorter one behind the longer.
+    Returns ``(collective_result, compute_result)``.
+    """
+    r = collective()
+    if not overlap:
+        compute_inputs = after(compute_inputs, *probe_all(r))
+    return r, compute(compute_inputs)

@@ -18,6 +18,12 @@ _DEFAULT = {
     "pallas_interpret": None,   # None = auto: interpreted on CPU, compiled
     #                             on TPU/GPU (kernels.quant.resolve_interpret
     #                             keys on the backend); booleans force
+    "overlap_schedule": "auto",  # auto | serial | pipelined — bucket-chain
+    #                             issue order for compressed gradient
+    #                             collectives (parallel/overlap.py); auto
+    #                             pipelines when a tree packs into more
+    #                             than one bucket.  The headroom_overlap
+    #                             experiment pins each arm explicitly.
 }
 
 _local = threading.local()

@@ -39,6 +39,15 @@ class TrainOptions:
     #                                None = auto: on for chunked methods,
     #                                off for shape-preserving int8_pairwise
     dp_bucket_bytes: int = collectives.DEFAULT_BUCKET_BYTES
+    dp_overlap: Optional[bool] = None    # bucket-chain schedule: True
+    #                                software-pipelines (chain i in flight
+    #                                while bucket i+1 packs — and, since
+    #                                nothing ties the chains to the rest of
+    #                                the step, while remaining backward/
+    #                                optimizer compute runs), False forces
+    #                                one chain at a time; None = policy
+    #                                auto: pipeline when >1 bucket
+    #                                (parallel/overlap.py)
     opt: opt.OptConfig = field(default_factory=opt.OptConfig)
 
 
@@ -172,7 +181,8 @@ def make_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
             grads, errors = collectives.reduce_gradients(
                 grads, "pod", options.dp_method, state.get("err"),
                 bucketed=options.dp_bucketed,
-                bucket_bytes=options.dp_bucket_bytes)
+                bucket_bytes=options.dp_bucket_bytes,
+                overlap=options.dp_overlap)
             errors = (jax.tree_util.tree_map(
                 lambda e: e.astype(jnp.bfloat16), errors)
                 if errors is not None else None)

@@ -115,3 +115,131 @@ def test_quant_kernel_pads_ragged_rows():
         xd = Q.dequantize_int8(q, s, block_rows=64)
         assert xd.shape == (N, C_)
         assert jnp.max(jnp.abs(xd - x)) <= float(jnp.max(s)) + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# the overlap scheduler (parallel/overlap.py) — schedule mechanics that
+# need no multi-device mesh
+# ---------------------------------------------------------------------------
+
+def test_run_schedule_empty_plan_is_a_noop_under_both_schedules():
+    """A tree whose every leaf is below MIN_COMPRESS_SIZE buckets to
+    nothing; forcing the pipelined schedule must not index bucket 0 of an
+    empty plan (regression: the overlap branch crashed, serial did not)."""
+    from repro.parallel import overlap as O
+
+    def boom(*a):
+        raise AssertionError("nothing to pack")
+
+    assert O.run_schedule(0, boom, boom, overlap=False) == []
+    assert O.run_schedule(0, boom, boom, overlap=True) == []
+    # end-to-end through reduce_gradients: single device, axis size 1
+    tiny = {"b": jnp.ones((8,)), "ln": jnp.ones((4,))}
+    mesh = jax.sharding.Mesh(jax.devices()[:1], ("pod",))
+    from jax.sharding import PartitionSpec as P
+    from repro.parallel import compat
+    for ov in (False, True):
+        out, res = jax.jit(compat.shard_map(
+            lambda t: C.reduce_gradients(t, "pod", "int8_ring", None,
+                                         bucketed=True, overlap=ov),
+            mesh=mesh, in_specs=(jax.tree_util.tree_map(lambda _: P(), tiny),),
+            out_specs=(jax.tree_util.tree_map(lambda _: P(), tiny),) * 2,
+            check=False))(tiny)
+        assert jnp.allclose(out["b"], tiny["b"])   # pmean over axis of 1
+
+
+def test_resolve_overlap_precedence():
+    from repro.parallel import overlap as O
+    # explicit argument wins over any policy
+    with runtime.use_policy(overlap_schedule="serial"):
+        assert O.resolve_overlap(True, 1) is True
+    with runtime.use_policy(overlap_schedule="pipelined"):
+        assert O.resolve_overlap(False, 8) is False
+    # policy wins over auto
+    with runtime.use_policy(overlap_schedule="serial"):
+        assert O.resolve_overlap(None, 8) is False
+    with runtime.use_policy(overlap_schedule="pipelined"):
+        assert O.resolve_overlap(None, 1) is True
+    # auto: pipeline only multi-bucket plans
+    with runtime.use_policy(overlap_schedule="auto"):
+        assert O.resolve_overlap(None, 1) is False
+        assert O.resolve_overlap(None, 2) is True
+    with runtime.use_policy(overlap_schedule="bogus"):
+        with pytest.raises(ValueError):
+            O.resolve_overlap(None, 2)
+
+
+def test_planner_rule_1b_overlap_from_grad_bytes():
+    """Rule 1b: with a gradient-size estimate the planner decides overlap
+    (>1 bucket => on); without one it defers to trace-time auto (None)."""
+    from repro.core.planner import make_plan
+    from repro.core.headroom import RooflineTerms
+    from repro.experiments.record import Record
+
+    recs = [Record("stressors.suite", "quant-int8", "bogo_ops_per_sec",
+                   100.0, relative=1.5)]
+    terms = RooflineTerms(0.01, 0.004, 0.02)   # collective-bound
+    multi = make_plan(terms, recs, grad_bytes=3 * (4 << 20))
+    assert multi.dp_method == "int8_a2a" and multi.dp_overlap is True
+    single = make_plan(terms, recs, grad_bytes=1 << 20)
+    assert single.dp_overlap is False
+    deferred = make_plan(terms, recs)
+    assert deferred.dp_overlap is None
+
+
+def _count_probe_barriers(jaxpr):
+    """optimization_barrier eqns carrying a scalar operand, recursively.
+
+    The serial schedule's cross-chain edge is a *scalar probe* barriered
+    with the next bucket's buffer (overlap.after/probe); the pipelined
+    schedule's stage barriers carry only buffer-shaped values.  Scalar-
+    probe barriers are therefore the serial schedule's signature."""
+    def subs(v):
+        if hasattr(v, "eqns"):               # a raw Jaxpr
+            yield v
+        elif hasattr(v, "jaxpr"):            # a ClosedJaxpr
+            yield v.jaxpr
+        elif isinstance(v, (list, tuple)):
+            for x in v:
+                yield from subs(x)
+
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "optimization_barrier" and any(
+                getattr(v.aval, "shape", None) == () for v in eqn.invars):
+            n += 1
+        for p in eqn.params.values():
+            for sub in subs(p):
+                n += _count_probe_barriers(sub)
+    return n
+
+
+def test_schedule_shape_serial_vs_pipelined_jaxpr():
+    """The re-serialization guard no wall-clock gate can provide: the
+    serial schedule must emit exactly n_buckets-1 scalar-probe barriers
+    (one cross-chain edge per boundary) and the pipelined schedule none —
+    if the pipelined path ever re-serializes (or serial loses its edges),
+    this shape check fails deterministically."""
+    from jax.sharding import PartitionSpec as P
+    from repro.parallel import compat
+
+    n_leaves, elems = 4, 8192
+    tree = {f"w{i}": jnp.ones((elems,), jnp.float32) for i in range(n_leaves)}
+    specs = jax.tree_util.tree_map(lambda _: P(), tree)
+    mesh = jax.sharding.Mesh(jax.devices()[:1], ("pod",))
+
+    def reducer(ov):
+        return compat.shard_map(
+            lambda t: C.reduce_gradients(t, "pod", "int8_ring", None,
+                                         bucketed=True,
+                                         bucket_bytes=elems * 4,
+                                         overlap=ov),
+            mesh=mesh, in_specs=(specs,), out_specs=(specs, specs),
+            check=False)
+
+    serial = jax.make_jaxpr(reducer(False))(tree)
+    pipelined = jax.make_jaxpr(reducer(True))(tree)
+    assert _count_probe_barriers(serial.jaxpr) == n_leaves - 1, \
+        "serial schedule lost its cross-chain edges"
+    assert _count_probe_barriers(pipelined.jaxpr) == 0, \
+        "pipelined schedule re-serialized (scalar-probe barriers present)"

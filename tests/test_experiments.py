@@ -154,6 +154,7 @@ def test_builtin_registrations_cover_all_families():
             "roofline"} <= fams
     assert reg.get("inpath.collectives").requires_devices == 2
     assert reg.get("inpath.bucketing").requires_devices == 2
+    assert reg.get("inpath.headroom_overlap").requires_devices == 2
 
 
 def test_inpath_skips_on_single_device():
@@ -292,6 +293,57 @@ def test_diff_threshold_direction_gating(tmp_path, capsys):
                  "--threshold", "wall_s_per_call=+1.0"]) == 1
     err = capsys.readouterr().err
     assert "rate.ops_per_sec" in err and "wall.wall_s_per_call" in err
+
+
+def test_diff_accepts_baseline_directory(tmp_path, capsys):
+    """A directory of ``*.jsonl`` files is a valid diff argument — the
+    curated-baseline layout: files concatenate in sorted order, later
+    files winning repeated keys — and thresholds gate against it."""
+    bdir = tmp_path / "baseline"
+    bdir.mkdir()
+    write_jsonl([Record("fam.a", "r1", "overlap_efficiency", 0.9),
+                 Record("fam.a", "r2", "ops", 7.0)],
+                open(bdir / "a.jsonl", "w"))
+    write_jsonl([Record("fam.a", "r2", "ops", 8.0)],   # later file wins
+                open(bdir / "b.jsonl", "w"))
+    new = tmp_path / "new.jsonl"
+    write_jsonl([Record("fam.a", "r1", "overlap_efficiency", 0.95),
+                 Record("fam.a", "r2", "ops", 8.0)], open(new, "w"))
+    assert main(["diff", str(bdir), str(new),
+                 "--threshold", "overlap_efficiency=+1.0"]) == 0
+    out = capsys.readouterr().out
+    assert "r1.overlap_efficiency: 0.9 -> 0.95" in out
+    assert "r2" not in out   # 8.0 == 8.0 after later-file override
+    # a catastrophic schedule regression (ratio more than doubles) gates
+    bad = tmp_path / "bad.jsonl"
+    write_jsonl([Record("fam.a", "r1", "overlap_efficiency", 2.0)],
+                open(bad, "w"))
+    assert main(["diff", str(bdir), str(bad),
+                 "--threshold", "overlap_efficiency=+1.0"]) == 1
+    # an empty directory is a usage error, not a silent no-op diff
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert main(["diff", str(empty), str(new)]) == 2
+
+
+def test_repo_baseline_stream_parses_and_covers_overlap():
+    """The shipped curated baseline must stay loadable and keep the
+    acceptance-defining rows: overlap_efficiency per method with at least
+    one *chunked* method strictly below 1.0 (the overlapped step beat the
+    serial one on the reference 4-device mesh)."""
+    import os
+    bdir = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                        "experiments", "records", "baseline")
+    from repro.experiments.diff import read_stream
+    idx = read_stream(bdir)
+    effs = {name: r.value for (exp, name, metric), r in idx.items()
+            if metric == "overlap_efficiency"}
+    assert {"stock", "int8_a2a", "int8_ring", "int8_pairwise",
+            "ring"} <= set(effs)
+    chunked = {"int8_a2a", "int8_ring", "ring"}
+    assert any(effs[m] < 1.0 for m in chunked), effs
+    for r in idx.values():   # curation stripped the volatile stamps
+        assert "git_commit" not in r.params
 
 
 def test_runner_stamps_git_commit_in_params(temp_experiment):

@@ -63,6 +63,73 @@ def test_rwkv6_chunked_jnp_matches_ref():
     assert jnp.max(jnp.abs(y1 - y2)) < 1e-3
 
 
+def test_kernel_defaults_resolve_interpret_per_backend():
+    """The kernel entry points default ``interpret=None`` and resolve per
+    backend (the quant treatment, ROADMAP open item) — on this CPU
+    container a default call runs the interpreter (a compiled-Mosaic
+    attempt would fail), and the hardcoded ``interpret=True`` defaults
+    are gone."""
+    import inspect
+
+    from repro.kernels import flash_attention as fa_mod
+    from repro.kernels import rwkv6_scan as rs_mod
+    for fn in (fa_mod.flash_attention_fwd, rs_mod.rwkv6_scan_fwd):
+        assert inspect.signature(fn).parameters["interpret"].default is None
+    ks = jax.random.split(jax.random.key(11), 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 64, 1, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 64, 1, 16), jnp.float32)
+    got = fa_mod.flash_attention_fwd(q, k, v, block_q=32, block_k=32)
+    want = ref.flash_attention_ref(q, k, v)
+    assert jnp.max(jnp.abs(got - want)) < 2e-5
+
+
+def test_policy_flip_redispatches_without_stale_jit_cache(monkeypatch):
+    """A ``runtime.policy()`` flip must change the kernel dispatch even for
+    an already-seen shape: the jitted wrappers in ``kernels/ops.py`` key
+    their cache on the resolved ``interpret`` (a static argument), so a
+    flip retraces instead of silently reusing the first trace — the
+    stale-cache hazard the quant wrappers always documented, fixed for
+    attention/rwkv too."""
+    from repro import runtime
+    from repro.kernels import flash_attention as fa_mod
+    from repro.kernels import rwkv6_scan as rs_mod
+
+    seen_fa, seen_rs = [], []
+    real_fa, real_rs = fa_mod.flash_attention_fwd, rs_mod.rwkv6_scan_fwd
+    monkeypatch.setattr(
+        fa_mod, "flash_attention_fwd",
+        lambda *a, **kw: seen_fa.append(kw["interpret"]) or real_fa(*a, **kw))
+    monkeypatch.setattr(
+        rs_mod, "rwkv6_scan_fwd",
+        lambda *a, **kw: seen_rs.append(kw["interpret"]) or real_rs(*a, **kw))
+
+    # odd shapes nothing else in the suite uses, so this test owns the
+    # relevant jit-cache entries
+    ks = jax.random.split(jax.random.key(13), 5)
+    q = jax.random.normal(ks[0], (1, 96, 2, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 96, 1, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 96, 1, 16), jnp.float32)
+    r = jax.random.normal(ks[3], (1, 96, 1, 16), jnp.float32)
+    w = jax.nn.sigmoid(jax.random.normal(ks[4], (1, 96, 1, 16))) * 0.5 + 0.45
+    u = jnp.zeros((1, 16))
+
+    def trace_all():
+        # abstract eval: records the trace-time dispatch without running
+        # (a compiled-Mosaic attempt on CPU would otherwise fail)
+        jax.eval_shape(lambda: ops.flash_attention(q, k, v, block_q=32,
+                                                   block_k=32))
+        jax.eval_shape(lambda: ops.rwkv6_scan(r, k, v, w, u, chunk=32))
+
+    with runtime.use_policy(pallas_interpret=True):
+        trace_all()
+        trace_all()   # same shape + same policy: cache hit, no retrace
+    with runtime.use_policy(pallas_interpret=False):
+        trace_all()   # policy flip, same shape: MUST retrace, not reuse
+    assert seen_fa == [True, False], seen_fa
+    assert seen_rs == [True, False], seen_rs
+
+
 @pytest.mark.parametrize("N,C", [(256, 512), (512, 1024), (128, 64)])
 def test_quant_kernel_matches_ref(N, C):
     from repro import runtime

@@ -13,6 +13,7 @@ from repro.analysis.hlocost import _parse_instr
 from repro.core.headroom import RooflineTerms, derived_headroom
 from repro.data.pipeline import DataConfig, synth_batch
 from repro.kernels import ref
+from repro.parallel import buckets as B
 from repro.train.optimizer import OptConfig, schedule
 
 settings.register_profile("ci", max_examples=25, deadline=None)
@@ -76,6 +77,99 @@ def test_instr_parser_tuple_types():
     ins = _parse_instr(line)
     assert ins["op"] == "while" and ins["name"] == "while.1"
     assert "body=%body" in ins["rest"]
+
+
+# ---------------------------------------------------------------------------
+# gradient bucketing (parallel/buckets.py)
+# ---------------------------------------------------------------------------
+
+_LEAF_DTYPES = (jnp.float32, jnp.bfloat16, jnp.float16)
+
+# a random "gradient tree" silhouette: each leaf is (shape, dtype-index);
+# rank 0-3, small dims, mixed float dtypes
+_leaves_strategy = st.lists(
+    st.tuples(st.lists(st.integers(1, 9), min_size=0, max_size=3),
+              st.integers(0, len(_LEAF_DTYPES) - 1)),
+    min_size=1, max_size=8)
+
+
+def _make_leaves(spec):
+    """Deterministic arrays for a (shape, dtype-index) list — values are
+    whatever the dtype can represent (the array IS its own cast), so a
+    pack/unpack round-trip has no excuse for not being bit-exact."""
+    out = []
+    for i, (shape, di) in enumerate(spec):
+        size = int(np.prod(shape)) if shape else 1
+        vals = (np.arange(size, dtype=np.float64) - 3.1 * i) * 0.37
+        out.append(jnp.asarray(vals.reshape(shape), _LEAF_DTYPES[di]))
+    return out
+
+
+@given(_leaves_strategy, st.sampled_from([64, 256, 1024, B.DEFAULT_BUCKET_BYTES]),
+       st.sampled_from([1, 4, 64]))
+def test_bucket_plan_partitions_and_respects_cap(spec, bucket_bytes, min_sz):
+    leaves = _make_leaves(spec)
+    plan = B.plan_buckets(leaves, bucket_bytes=bucket_bytes,
+                          min_compress_size=min_sz)
+    # every leaf lands exactly once: bucketed slots + passthrough indices
+    # partition the leaf index space
+    slot_idx = [s.leaf for b in plan.buckets for s in b]
+    assert sorted(slot_idx + list(plan.passthrough)) == list(range(len(leaves)))
+    assert plan.n_leaves == len(leaves)
+    # passthrough is exactly the below-threshold leaves
+    assert set(plan.passthrough) == {
+        i for i, x in enumerate(leaves) if x.size < min_sz}
+    # byte cap: a bucket exceeds it only as a single oversized leaf
+    cap = max(1, bucket_bytes // 4)
+    for bucket, total in zip(plan.buckets, plan.bucket_sizes()):
+        assert total <= cap or len(bucket) == 1, (total, cap, len(bucket))
+    # slots are contiguous within their bucket (offset = running size)
+    for bucket in plan.buckets:
+        off = 0
+        for s in bucket:
+            assert s.offset == off and s.size == int(np.prod(s.shape) or 1)
+            off += s.size
+
+
+@given(_leaves_strategy, st.sampled_from([64, 1024]))
+@settings(max_examples=15)
+def test_bucket_pack_unpack_roundtrips_bit_exactly(spec, bucket_bytes):
+    leaves = _make_leaves(spec)
+    plan = B.plan_buckets(leaves, bucket_bytes=bucket_bytes,
+                          min_compress_size=1)   # everything bucketed
+    assert not plan.passthrough
+    bufs = B.pack(plan, leaves)
+    assert [b.dtype for b in bufs] == [jnp.float32] * plan.n_buckets
+    assert [int(b.size) for b in bufs] == plan.bucket_sizes()
+    back = B.unpack(plan, bufs, like=leaves)
+    for orig, rt in zip(leaves, back):
+        assert rt.shape == orig.shape and rt.dtype == orig.dtype
+        # bit-exact: fp32/bf16/fp16 -> fp32 buffer -> original dtype is
+        # value-preserving, and pack/unpack must not perturb it
+        assert bool(jnp.all(rt == orig)), (orig.dtype, orig.shape)
+    # per-bucket packing (the overlap schedule's entry point) agrees with
+    # the all-at-once form
+    for i in range(plan.n_buckets):
+        assert bool(jnp.all(B.pack_bucket(plan, i, leaves) == bufs[i]))
+
+
+@given(_leaves_strategy)
+@settings(max_examples=15)
+def test_bucket_error_feedback_scatters_leaf_aligned(spec):
+    """The residual of a bucket-granular exchange comes back through the
+    same plan: packing grads and errors, adding, and unpacking must equal
+    the leafwise sum — so per-leaf error-feedback state survives
+    bucketing exactly (train/step.py keeps its per-leaf ``err`` tree)."""
+    leaves = _make_leaves(spec)
+    errs = [(-0.5 * x.astype(jnp.float32)).astype(x.dtype) for x in leaves]
+    plan = B.plan_buckets(leaves, bucket_bytes=256, min_compress_size=1)
+    fused = [g + e for g, e in zip(B.pack(plan, leaves), B.pack(plan, errs))]
+    back = B.unpack(plan, fused, like=leaves)
+    for orig, err, rt in zip(leaves, errs, back):
+        assert rt.shape == orig.shape and rt.dtype == orig.dtype
+        want = (orig.astype(jnp.float32) + err.astype(jnp.float32)) \
+            .astype(orig.dtype)
+        assert bool(jnp.all(rt == want))
 
 
 @given(st.integers(1, 6), st.integers(1, 6))
