@@ -1,17 +1,18 @@
 #!/usr/bin/env python
-"""Fail if README.md references a CLI flag the experiments CLI doesn't list.
+"""Fail if README.md references a CLI flag the owning CLI doesn't list.
 
 Run from the repo root (CI does):
 
     PYTHONPATH=src python scripts/check_readme_cli.py
 
-Every ``--flag`` token that appears in README.md inside a
-``python -m repro.experiments`` context must appear in
-``python -m repro.experiments --help``; a flag renamed or removed in the
-CLI without a README update is a documentation regression, caught here
-rather than by a confused user.  Flags README mentions for *other* tools
-(pytest, XLA) are out of scope — the scan is restricted to lines/blocks
-that mention the experiments CLI or its flags table.
+Every ``--flag`` token that appears in README.md inside a covered-CLI
+context must appear in that CLI's ``--help``: a flag renamed or removed
+without a README update is a documentation regression, caught here rather
+than by a confused user.  Covered CLIs are listed in ``CLIS``; a flag
+token is attributed to the CLI named on its line, or to the CLI owning
+the enclosing heading section (which is how the README flag tables work).
+Flags README mentions for *other* tools (pytest, XLA) are out of scope —
+lines naming no covered CLI inside no covered section are never scanned.
 """
 from __future__ import annotations
 
@@ -19,26 +20,29 @@ import re
 import subprocess
 import sys
 
+CLIS = ("repro.experiments", "repro.launch.serve")
 
-def readme_cli_flags(text: str) -> set[str]:
-    """``--flag`` tokens in experiments-CLI context within README.md."""
-    flags: set[str] = set()
-    in_cli_section = False
+
+def readme_cli_flags(text: str) -> dict[str, set[str]]:
+    """``--flag`` tokens per covered CLI, by README context."""
+    flags: dict[str, set[str]] = {c: set() for c in CLIS}
+    section = None      # CLI owning the current heading section, if any
     in_fence = False
     for line in text.splitlines():
         if line.lstrip().startswith("```"):
             in_fence = not in_fence
         # a leading '#' inside a code fence is a shell comment, not a heading
         if line.startswith("#") and not in_fence:
-            in_cli_section = "repro.experiments" in line
-        relevant = in_cli_section or "repro.experiments" in line \
-            or line.lstrip().startswith("| `--")
-        if relevant:
+            section = next((c for c in CLIS if c in line), None)
+        inline = next((c for c in CLIS if c in line), None)
+        owner = inline or section
+        if owner:
             # underscore included so an underscore flag can't be collected
             # as a truncated prefix; --xla* are XLA env flags that share
-            # command lines with the CLI, never CLI flags themselves
-            flags.update(f for f in re.findall(r"--[a-z][a-z0-9_-]*", line)
-                         if not f.startswith("--xla"))
+            # command lines with the CLIs, never CLI flags themselves
+            flags[owner].update(
+                f for f in re.findall(r"--[a-z][a-z0-9_-]*", line)
+                if not f.startswith("--xla"))
     return flags
 
 
@@ -46,25 +50,30 @@ def main() -> int:
     with open("README.md") as f:
         readme = f.read()
     wanted = readme_cli_flags(readme)
-    if not wanted:
-        print("check_readme_cli: no experiments-CLI flags found in "
-              "README.md — scan is broken", file=sys.stderr)
-        return 1
-    help_text = subprocess.run(
-        [sys.executable, "-m", "repro.experiments", "--help"],
-        capture_output=True, text=True, check=True).stdout
-    listed = set(re.findall(r"--[a-z][a-z0-9_-]*", help_text))
-    missing = sorted(wanted - listed)
-    if missing:
-        print("README.md references experiments-CLI flags that "
-              "`python -m repro.experiments --help` does not list:",
-              file=sys.stderr)
-        for flag in missing:
-            print(f"  {flag}", file=sys.stderr)
-        return 1
-    print(f"check_readme_cli: {len(wanted)} README flags all present "
-          "in --help")
-    return 0
+    rc = 0
+    for cli in CLIS:
+        if not wanted[cli]:
+            print(f"check_readme_cli: no {cli} flags found in README.md — "
+                  "the CLI is undocumented or the scan is broken",
+                  file=sys.stderr)
+            rc = 1
+            continue
+        help_text = subprocess.run(
+            [sys.executable, "-m", cli, "--help"],
+            capture_output=True, text=True, check=True).stdout
+        listed = set(re.findall(r"--[a-z][a-z0-9_-]*", help_text))
+        missing = sorted(wanted[cli] - listed)
+        if missing:
+            print(f"README.md references {cli} flags that "
+                  f"`python -m {cli} --help` does not list:",
+                  file=sys.stderr)
+            for flag in missing:
+                print(f"  {flag}", file=sys.stderr)
+            rc = 1
+        else:
+            print(f"check_readme_cli: {len(wanted[cli])} README flags all "
+                  f"present in {cli} --help")
+    return rc
 
 
 if __name__ == "__main__":

@@ -67,6 +67,52 @@ def records_table(records: Iterable[Record]) -> str:
     return "\n".join(out)
 
 
+def serve_table(records: Iterable[Record]) -> str:
+    """Latency-decomposition view of a ``serve.load_sweep`` Record stream.
+
+    One row per offered-load level: sustained throughput (and its
+    fraction of burst capacity), the per-stage latency quantiles (TTFT /
+    TPOT from the metrics, queue wait from params), and the probe
+    kernel's headroom FLOP/s beside the engine.
+    """
+    by_level: dict[str, dict] = {}
+    for r in records:
+        if r.experiment != "serve.load_sweep" or r.skipped or r.error:
+            continue
+        if not r.name.startswith("load_"):
+            continue
+        d = by_level.setdefault(r.name, {"params": {}})
+        d[r.metric] = r
+        d["params"].update(r.params)
+    out = ["| level | offered rps | tok/s | of cap | queue p50 ms | "
+           "ttft p50/p99 ms | tpot p50/p99 ms | headroom GFLOP/s |",
+           "|---|---|---|---|---|---|---|---|"]
+
+    def ms(level, metric):
+        r = level.get(metric)
+        return f"{r.value * 1e3:.1f}" if r and r.value is not None else "-"
+
+    def key(name):
+        p = by_level[name]["params"]
+        return p.get("offered_mult", p.get("offered_rps", 0.0))
+
+    for name in sorted(by_level, key=key):
+        lvl = by_level[name]
+        p = lvl["params"]
+        tps = lvl.get("tokens_per_sec")
+        hr = lvl.get("headroom_flops_per_s")
+        out.append(
+            f"| {name} | {p.get('offered_rps', 0.0):.1f} "
+            f"| {tps.value:.0f} | {tps.relative:.0%} "
+            f"| {p.get('queue_wait_p50_s', 0.0) * 1e3:.1f} "
+            f"| {ms(lvl, 'ttft_p50_s')}/{ms(lvl, 'ttft_p99_s')} "
+            f"| {ms(lvl, 'tpot_p50_s')}/{ms(lvl, 'tpot_p99_s')} "
+            f"| {hr.value / 1e9:.2f} |" if tps and hr else f"| {name} | "
+            "incomplete level (missing tokens_per_sec/headroom rows) "
+            "| | | | | | |")
+    return "\n".join(out)
+
+
 def table(dirname: str = "experiments/dryrun", mesh: str = None) -> str:
     """The original roofline table over dry-run JSONs."""
     rows = []

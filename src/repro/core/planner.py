@@ -15,6 +15,10 @@ Decision rules (each traceable to a paper finding, see DESIGN.md section 6):
   4. quant kernel placement: use the Pallas int8 kernel only if the quant
      stressor shows the device beats the reference platform (paper: offload
      only operations the device is relatively good at).
+  5. serve-side offload: extra work rides beside the serving engine only
+     while the ``serve.load_sweep`` probe keeps clearing a FLOP/s floor at
+     every *sustained* load level (paper: headroom measured under traffic,
+     not at idle, decides what the device can absorb).
 """
 from __future__ import annotations
 
@@ -38,15 +42,61 @@ class OffloadPlan:
     #                                 time (pipeline when >1 bucket)
     remat: str = "full"
     microbatches: int = 1
+    serve_offload: Optional[bool] = None    # rule 5: extra work beside the
+    #                                 serving engine — None when no
+    #                                 serve.load_sweep stream was provided
     notes: list = field(default_factory=list)
     ranking: list = field(default_factory=list)
+
+
+def serve_offload_assessment(serve_records: Iterable[Record],
+                             min_headroom_flops: Optional[float] = None
+                             ) -> dict:
+    """Rule 5's input: probe headroom per offered-load level.
+
+    Reads the ``serve.load_sweep`` rows (``headroom_flops_per_s`` per
+    ``load_*`` level — the probe kernel's achieved FLOP/s beside the
+    engine) and decides whether serve-side offloaded work is profitable:
+    the *worst* headroom across levels that sustained their offered load
+    must clear ``min_headroom_flops`` (default: the
+    ``serve_headroom_min_gflops`` runtime policy knob).  Levels past
+    saturation (offered load not sustained) are excluded — at those the
+    engine itself is already failing its traffic, and the paper's rule 2
+    applies instead: don't add work to a saturated processor.
+    """
+    if min_headroom_flops is None:
+        from repro import runtime
+        min_headroom_flops = \
+            float(runtime.policy()["serve_headroom_min_gflops"]) * 1e9
+    levels: dict[str, float] = {}
+    sustained: dict[str, bool] = {}
+    for r in serve_records:
+        if r.skipped or r.error or r.metric != "headroom_flops_per_s":
+            continue
+        if r.experiment != "serve.load_sweep":
+            continue        # a combined run stream carries other families
+        if not r.name.startswith("load_"):
+            continue        # the probe_idle reference row is not a level
+        levels[r.name] = float(r.value)
+        sustained[r.name] = bool(r.params.get("sustained", True))
+    usable = {n: v for n, v in levels.items() if sustained[n]}
+    worst = min(usable.values()) if usable else 0.0
+    return {
+        "profitable": bool(usable) and worst >= min_headroom_flops,
+        "worst_headroom_flops": worst,
+        "threshold_flops": min_headroom_flops,
+        "levels": levels,
+        "sustained_levels": sorted(usable),
+    }
 
 
 def make_plan(terms: RooflineTerms, stressor_records: Iterable[Record],
               multi_pod: bool = True,
               bytes_per_device: Optional[float] = None,
               hbm_bytes: float = 16e9,
-              grad_bytes: Optional[float] = None) -> OffloadPlan:
+              grad_bytes: Optional[float] = None,
+              serve_records: Optional[Iterable[Record]] = None
+              ) -> OffloadPlan:
     """Decide the offload configuration from the roofline terms plus the
     unified ``Record`` stream of the stressor suite (``stressors.suite``
     rows, as emitted by the experiment Runner or read back from JSONL)."""
@@ -111,4 +161,20 @@ def make_plan(terms: RooflineTerms, stressor_records: Iterable[Record],
         plan.notes.append(
             f"quant-int8 stressor relative={q.relative:.1f}x reference: "
             "Pallas quant kernel placed in the collective path")
+
+    # rule 5: serve-side offload only while measured headroom under load
+    # clears the floor (paper: the decision is made under sustained
+    # traffic, not from the idle rate)
+    if serve_records is not None:
+        a = serve_offload_assessment(serve_records)
+        plan.serve_offload = a["profitable"]
+        plan.notes.append(
+            f"serve offload {'ON' if a['profitable'] else 'OFF'}: worst "
+            f"sustained-load probe headroom "
+            f"{a['worst_headroom_flops'] / 1e9:.2f} GFLOP/s vs "
+            f"{a['threshold_flops'] / 1e9:.2f} floor over "
+            f"{len(a['sustained_levels'])} sustained level(s)"
+            + ("" if a["sustained_levels"] else
+               " — no level sustained its offered load; rule 2 applies "
+               "(don't add work to a saturated engine)"))
     return plan

@@ -1,0 +1,254 @@
+"""Serving characterization — the paper's headroom question under load.
+
+The paper asks how much processing margin survives on a device that is
+*sustaining traffic*, and answers it with a pktgen sweep: drive the link,
+inject work, find where throughput drops.  ``load_sweep`` transposes that
+to serving: the synthetic load generator replaces pktgen (offered load in
+requests/s is the independent variable), the continuous-batching engine
+replaces the forwarding path, and the injected work becomes a *probe
+kernel* mounted on the engine's idle hook — its achieved FLOP/s at each
+load level is the compute headroom left beside the traffic.  Per-stage
+latency decomposition (queue wait, TTFT, TPOT — the stamps
+``serve.scheduler`` keeps per request) is what makes the sweep
+actionable, the same way the DPU studies decompose per-stage datapath
+latency rather than reporting a single number.
+
+``continuous_vs_static`` is the engine-level comparison: the same mixed
+workload through the static run-to-completion engine (the seed's serving
+path) and the slot-admission engine, reported as sustained token
+throughput.
+
+Both emit the unified ``Record`` stream and register through
+``@experiment`` in ``repro.experiments.defs`` (family ``serve``).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import all_archs, smoke
+from repro.experiments.measure import measure
+from repro.experiments.record import Record
+from repro.models import registry
+from repro.serve.continuous import ContinuousEngine
+from repro.serve.loadgen import LoadSpec, make_requests
+
+EXPERIMENT_LOAD = "serve.load_sweep"
+EXPERIMENT_ENGINE = "serve.continuous_vs_static"
+
+# offered-load multiples of measured capacity: two under, at, and past
+# saturation — the knee the paper's delay sweep looks for, in request rate
+OFFERED_MULTS = (0.25, 0.5, 1.0, 2.0)
+
+PROBE_DIM = 96
+PROBE_ITERS = 4
+
+
+def _smoke_engine(arch: str, n_slots: int, cache_len: int, block_size: int):
+    cfg = smoke(all_archs()[arch])
+    params = registry.init_params(cfg, jax.random.key(0))
+    eng = ContinuousEngine(cfg, params, n_slots=n_slots,
+                           cache_len=cache_len, block_size=block_size)
+    return cfg, params, eng
+
+
+def _make_probe(dim: int = PROBE_DIM, iters: int = PROBE_ITERS):
+    """A chained-matmul probe kernel and its FLOP count per call."""
+    a = jax.random.normal(jax.random.key(7), (dim, dim), jnp.float32) / dim
+
+    @jax.jit
+    def probe(m):
+        def body(c, _):
+            return jnp.tanh(c @ m), None
+        out, _ = jax.lax.scan(body, m, None, length=iters)
+        return out
+
+    flops = iters * 2 * dim ** 3
+    return (lambda: jax.block_until_ready(probe(a))), flops
+
+
+def _pct(vals: Sequence[float], q: float) -> float:
+    return float(np.percentile(np.asarray(vals, np.float64), q))
+
+
+def load_sweep(duration: float = 0.3,
+               offered: Sequence[float] = OFFERED_MULTS,
+               arch: str = "olmo-1b", n_slots: int = 4,
+               cache_len: int = 64, block_size: int = 8,
+               prompt_lens: tuple = (8, 16), max_new: int = 8,
+               max_requests: int = 32) -> list[Record]:
+    """Offered-load sweep over the continuous-batching engine.
+
+    Per load level (a multiple of the measured burst capacity) the stream
+    carries: sustained token throughput (relative = fraction of
+    capacity), p50/p99 TTFT and TPOT, queue-wait quantiles in params, and
+    the probe kernel's achieved FLOP/s (relative = fraction of its idle
+    rate) — compute headroom while the engine sustains that traffic.
+    ``duration`` scales the measurement window per level.
+    """
+    cfg, _, eng = _smoke_engine(arch, n_slots, cache_len, block_size)
+    run_probe, probe_flops = _make_probe()
+    records: list[Record] = []
+    base_params = {"arch": cfg.name, "n_slots": n_slots,
+                   "cache_len": cache_len, "block_size": block_size,
+                   "kv_blocks": eng.kv.n_blocks,
+                   "prompt_lens": list(prompt_lens),
+                   "max_new_tokens": max_new}
+
+    # probe alone: the idle-FLOP/s reference every level is normalized to
+    m_idle = measure(run_probe, min(max(duration, 0.05), 0.25))
+    idle_fps = probe_flops * m_idle.calls_per_sec
+    records.append(Record(
+        EXPERIMENT_LOAD, "probe_idle", "headroom_flops_per_s", idle_fps,
+        unit="flop/s", relative=1.0,
+        params=dict(base_params, probe_dim=PROBE_DIM,
+                    probe_iters=PROBE_ITERS, probe_flops=probe_flops)))
+
+    # burst calibration: saturated capacity; also warms every compile
+    # (prefill per prompt length, decode, slot insert) out of the sweep
+    cal = make_requests(LoadSpec(n_requests=2 * n_slots, rate_rps=0.0,
+                                 prompt_lens=prompt_lens,
+                                 max_new_tokens=max_new,
+                                 vocab_size=cfg.vocab_size))
+    eng.generate(cal)                       # compile pass, untimed
+    cal2 = make_requests(LoadSpec(n_requests=2 * n_slots, rate_rps=0.0,
+                                  prompt_lens=prompt_lens,
+                                  max_new_tokens=max_new,
+                                  vocab_size=cfg.vocab_size, seed=1))
+    t0 = time.perf_counter()
+    eng.generate(cal2)
+    cal_el = time.perf_counter() - t0
+    cap_tps = sum(len(r.generated) for r in cal2) / cal_el
+    cap_rps = cap_tps / max_new
+    records.append(Record(
+        EXPERIMENT_LOAD, "capacity", "tokens_per_sec", cap_tps,
+        unit="tok/s", relative=1.0,
+        params=dict(base_params, wall_s=cal_el,
+                    requests_per_sec=cap_rps, mode="burst")))
+
+    window = max(2 * duration, 0.4)
+    for k, mult in enumerate(offered):
+        rate = mult * cap_rps
+        n = int(min(max(rate * window, 4), max_requests))
+        reqs = make_requests(LoadSpec(n_requests=n, rate_rps=rate,
+                                      prompt_lens=prompt_lens,
+                                      max_new_tokens=max_new,
+                                      vocab_size=cfg.vocab_size,
+                                      seed=10 + k))
+        probe_calls = 0
+
+        def hook():
+            nonlocal probe_calls
+            run_probe()
+            probe_calls += 1
+
+        t0 = time.perf_counter()
+        eng.run(reqs, idle_hook=hook)
+        el = time.perf_counter() - t0
+        toks = sum(len(r.generated) for r in reqs)
+        tps = toks / el
+        offered_tps = rate * max_new
+        sustained = tps >= 0.9 * offered_tps
+        ttft = [r.ttft_s for r in reqs]
+        qwait = [r.queue_wait_s for r in reqs]
+        prefill = [r.prefill_s for r in reqs]
+        tok_lat = [t for r in reqs for t in r.decode_token_s]
+        name = f"load_{mult:g}x"
+        level = dict(base_params, offered_mult=mult, offered_rps=rate,
+                     offered_tokens_per_sec=offered_tps, n_requests=n,
+                     completed=sum(r.done for r in reqs), wall_s=el,
+                     sustained=bool(sustained),
+                     queue_wait_p50_s=_pct(qwait, 50),
+                     queue_wait_p99_s=_pct(qwait, 99),
+                     prefill_p50_s=_pct(prefill, 50))
+        records.append(Record(EXPERIMENT_LOAD, name, "tokens_per_sec", tps,
+                              unit="tok/s", relative=tps / cap_tps,
+                              params=dict(level)))
+        records.append(Record(EXPERIMENT_LOAD, name, "ttft_p50_s",
+                              _pct(ttft, 50), unit="s", params=dict(level)))
+        records.append(Record(EXPERIMENT_LOAD, name, "ttft_p99_s",
+                              _pct(ttft, 99), unit="s", params=dict(level)))
+        if tok_lat:     # max_new=1 has no decode stage, hence no TPOT rows
+            records.append(Record(EXPERIMENT_LOAD, name, "tpot_p50_s",
+                                  _pct(tok_lat, 50), unit="s",
+                                  params=dict(level)))
+            records.append(Record(EXPERIMENT_LOAD, name, "tpot_p99_s",
+                                  _pct(tok_lat, 99), unit="s",
+                                  params=dict(level)))
+        headroom_fps = probe_calls * probe_flops / el
+        records.append(Record(
+            EXPERIMENT_LOAD, name, "headroom_flops_per_s", headroom_fps,
+            unit="flop/s", relative=headroom_fps / idle_fps if idle_fps
+            else None,
+            params=dict(level, probe_calls=probe_calls,
+                        probe_flops=probe_flops)))
+    return records
+
+
+def continuous_vs_static(duration: float = 0.3, arch: str = "olmo-1b",
+                         batch: int = 4, cache_len: int = 64,
+                         block_size: int = 8,
+                         n_requests: Optional[int] = None) -> list[Record]:
+    """Same mixed workload through both engines, as token throughput.
+
+    The workload mixes generation lengths (short and long requests
+    alternate), which is where run-to-completion loses: the static batch
+    decodes until its *longest* member finishes while done slots ride
+    along empty, the continuous engine refills them.  Prompt lengths stay
+    uniform so the comparison isolates scheduling (the static engine
+    left-pads mixed prompts, which changes its logits).
+    """
+    from repro.launch.mesh import make_mesh
+    from repro.serve.engine import Engine, Request
+
+    cfg = smoke(all_archs()[arch])
+    params = registry.init_params(cfg, jax.random.key(0))
+    if n_requests is None:
+        n_requests = int(min(max(8 * duration / 0.3, 2 * batch), 24))
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(0, cfg.vocab_size, size=8).astype(np.int32)
+               for _ in range(n_requests)]
+    # a wide generation-length mix: run-to-completion decodes every batch
+    # to its longest member (short requests ride along done), continuous
+    # batching refills those slots from the queue
+    news = [2 if i % 2 else 24 for i in range(n_requests)]
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    static = Engine(cfg, mesh, batch_size=batch, cache_len=cache_len,
+                    params=params)
+    cont = ContinuousEngine(cfg, params, n_slots=batch,
+                            cache_len=cache_len, block_size=block_size)
+
+    def run_static():
+        reqs = [Request(prompt=p.copy(), max_new_tokens=m)
+                for p, m in zip(prompts, news)]
+        for i in range(0, len(reqs), batch):
+            static.generate(reqs[i:i + batch])
+        return reqs
+
+    def run_cont():
+        from repro.serve.scheduler import ServeRequest
+        return cont.generate([ServeRequest(prompt=p.copy(),
+                                           max_new_tokens=m)
+                              for p, m in zip(prompts, news)])
+
+    results = []
+    for name, fn in (("static", run_static), ("continuous", run_cont)):
+        done = fn()                                   # compile pass
+        t0 = time.perf_counter()
+        done = fn()
+        el = time.perf_counter() - t0
+        toks = sum(len(r.generated) for r in done)
+        results.append((name, toks / el, el, toks))
+    base = results[0][1]
+    return [Record(
+        EXPERIMENT_ENGINE, name, "tokens_per_sec", tps, unit="tok/s",
+        relative=tps / base,
+        params={"arch": cfg.name, "batch": batch, "cache_len": cache_len,
+                "n_requests": n_requests, "wall_s": el, "tokens": toks,
+                "max_new_mix": sorted(set(news))})
+        for name, tps, el, toks in results]

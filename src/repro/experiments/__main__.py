@@ -67,6 +67,9 @@ def main(argv: Optional[list[str]] = None) -> int:
     if argv and argv[0] == "diff":
         from repro.experiments.diff import main as diff_main
         return diff_main(argv[1:])
+    if argv and argv[0] == "run":   # optional subcommand: running is the
+        argv = argv[1:]             # default action, 'run' names it
+
     args = _parse(argv)
     if args.devices:
         if "jax" in sys.modules:

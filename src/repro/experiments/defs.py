@@ -85,6 +85,25 @@ def _inpath_headroom_overlap(*, duration: float) -> Iterable[Record]:
     return inpath.measure_headroom_overlap(duration=duration)
 
 
+@experiment("serve.load_sweep", classes=("CPU", "MEMORY"),
+            figure="Fig. 2/4 (transposed to serving)",
+            description="offered-load sweep of the continuous-batching "
+                        "engine: sustained throughput, p50/p99 TTFT/TPOT, "
+                        "probe-kernel headroom beside the traffic")
+def _serve_load_sweep(*, duration: float) -> Iterable[Record]:
+    from repro.core import serving
+    return serving.load_sweep(duration=duration)
+
+
+@experiment("serve.continuous_vs_static", classes=("CPU",),
+            figure="(engine comparison)",
+            description="mixed-length workload: slot-admission continuous "
+                        "batching vs static run-to-completion batches")
+def _serve_engines(*, duration: float) -> Iterable[Record]:
+    from repro.core import serving
+    return serving.continuous_vs_static(duration=duration)
+
+
 @experiment("roofline.table", figure="roofline table",
             description="three-term roofline of compiled dry-run cells")
 def _roofline(*, duration: float) -> Iterable[Record]:

@@ -1,40 +1,118 @@
-"""Serving driver: loads (or inits) params, runs batched greedy decode."""
+"""Serving driver: synthetic offered load through the serving engines.
+
+Default path is the continuous-batching engine (slot admission, per-slot
+KV accounting); every request's latency decomposition — queue wait,
+TTFT, prefill, per-token decode — is printed per request, with a
+throughput summary at the end.  ``--static`` routes the same workload
+through the run-to-completion reference engine instead (no per-stage
+stamps there; it reports tokens and wall time only).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b \
+        --requests 8 --rate 20 --max-new 16
+
+``--rate 0`` (the default) submits everything as one burst; a positive
+rate drives evenly spaced arrivals at that many requests per second —
+the load-generator behind the ``serve.load_sweep`` experiment.
+"""
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
-import numpy as np
 
 from repro.configs import all_archs, smoke
-from repro.launch.mesh import make_host_mesh
 from repro.models import registry
-from repro.serve.engine import Engine, Request
+
+
+def _fmt_ms(v) -> str:
+    return f"{v * 1e3:.1f}ms" if v is not None else "-"
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="olmo-1b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--cache-len", type=int, default=128)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--requests", type=int, default=4)
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.serve",
+        description="Serve a synthetic request stream and report "
+                    "per-request latency decomposition.")
+    ap.add_argument("--arch", default="olmo-1b",
+                    help="architecture (smoke-reduced; see configs/)")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode slots (continuous) / batch size (static)")
+    ap.add_argument("--cache-len", type=int, default=128,
+                    help="per-slot KV cache positions")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV allocator block granularity, in tokens")
+    ap.add_argument("--max-new", type=int, default=16,
+                    help="new tokens generated per request")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="number of synthetic requests")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="offered load in requests/s (0 = one burst)")
+    ap.add_argument("--prompt-lens", default="8,16",
+                    help="comma-separated prompt lengths, cycled")
+    ap.add_argument("--arrivals", choices=("uniform", "poisson"),
+                    default="uniform",
+                    help="arrival process at --rate: evenly spaced or "
+                         "seeded poisson")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="load-generator seed (prompts + poisson arrivals)")
+    ap.add_argument("--static", action="store_true",
+                    help="use the static run-to-completion engine "
+                         "(burst submission only)")
     args = ap.parse_args()
+    if args.static and args.rate:
+        # the static engine has no arrival model — chunks run back to
+        # back; reporting a tok/s against a never-offered rate would make
+        # the two engines' numbers incomparable
+        ap.error("--static serves one burst; it cannot pace arrivals "
+                 "(drop --rate or use the continuous engine)")
 
     cfg = smoke(all_archs()[args.arch])
     params = registry.init_params(cfg, jax.random.key(0))
-    mesh = make_host_mesh(1, 1)
-    eng = Engine(cfg, mesh, batch_size=args.batch,
-                 cache_len=args.cache_len, params=params)
-    rng = np.random.RandomState(0)
-    reqs = [Request(prompt=rng.randint(0, cfg.vocab_size, size=8)
-                    .astype(np.int32), max_new_tokens=args.max_new)
-            for _ in range(args.requests)]
-    for i in range(0, len(reqs), args.batch):
-        out = eng.generate(reqs[i:i + args.batch])
-        for j, r in enumerate(out):
-            print(f"[serve] req {i+j}: prompt={r.prompt.tolist()} "
-                  f"-> {r.generated}")
+    prompt_lens = tuple(int(x) for x in args.prompt_lens.split(","))
+
+    from repro.serve.loadgen import LoadSpec, make_requests
+    spec = LoadSpec(n_requests=args.requests, rate_rps=args.rate,
+                    prompt_lens=prompt_lens, max_new_tokens=args.max_new,
+                    vocab_size=cfg.vocab_size, seed=args.seed,
+                    arrivals=args.arrivals)
+
+    if args.static:
+        from repro.launch.mesh import make_host_mesh
+        from repro.serve.engine import Engine, Request
+        eng = Engine(cfg, make_host_mesh(1, 1), batch_size=args.batch,
+                     cache_len=args.cache_len, params=params)
+        reqs = [Request(prompt=r.prompt, max_new_tokens=r.max_new_tokens)
+                for r in make_requests(spec)]
+        t0 = time.perf_counter()
+        for i in range(0, len(reqs), args.batch):
+            eng.generate(reqs[i:i + args.batch])
+        elapsed = time.perf_counter() - t0
+        for i, r in enumerate(reqs):
+            print(f"[serve] req {i}: prompt={len(r.prompt)} "
+                  f"tokens={len(r.generated)} (static batch — no "
+                  f"per-stage stamps)")
+    else:
+        from repro.serve.continuous import ContinuousEngine
+        eng = ContinuousEngine(cfg, params, n_slots=args.batch,
+                               cache_len=args.cache_len,
+                               block_size=args.block_size)
+        reqs = make_requests(spec)
+        t0 = time.perf_counter()
+        eng.run(reqs)
+        elapsed = time.perf_counter() - t0
+        for i, r in enumerate(reqs):
+            print(f"[serve] req {i}: prompt={len(r.prompt)} "
+                  f"tokens={len(r.generated)} "
+                  f"queue={_fmt_ms(r.queue_wait_s)} "
+                  f"ttft={_fmt_ms(r.ttft_s)} "
+                  f"prefill={_fmt_ms(r.prefill_s)} "
+                  f"tpot={_fmt_ms(r.tpot_s)}")
+    toks = sum(len(r.generated) for r in reqs)
+    mode = "static" if args.static else "continuous"
+    print(f"[serve] {mode}: {len(reqs)} requests, {toks} tokens in "
+          f"{elapsed:.2f}s -> {toks / elapsed:.1f} tok/s "
+          f"(offered {args.rate or 'burst'} req/s)")
 
 
 if __name__ == "__main__":

@@ -24,6 +24,17 @@ _DEFAULT = {
     #                             pipelines when a tree packs into more
     #                             than one bucket.  The headroom_overlap
     #                             experiment pins each arm explicitly.
+    "serve_prefill_per_step": 1,  # continuous-batching engine: max queued
+    #                             requests admitted (prefilled) per engine
+    #                             step, interleaved with the in-flight
+    #                             decode batch (serve/continuous.py);
+    #                             higher drains queues faster at the cost
+    #                             of decode stalls (TPOT spikes)
+    "serve_headroom_min_gflops": 1.0,  # planner rule 5: serving offload is
+    #                             profitable only while the probe kernel
+    #                             beside the engine clears this FLOP/s
+    #                             floor at every sustained load level
+    #                             (core/planner.serve_offload_assessment)
 }
 
 _local = threading.local()

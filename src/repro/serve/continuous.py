@@ -1,0 +1,250 @@
+"""Continuous-batching serve engine: slot admission + per-slot decode.
+
+The static ``engine.Engine`` runs one batch to completion; this engine
+keeps a fixed set of decode *slots* live and admits queued requests as
+slots (and KV blocks) free, interleaving each admission's prefill with
+the in-flight decode batch — a late request joins mid-stream instead of
+waiting for the current batch to drain.
+
+Mechanics (DESIGN.md section 11):
+
+* **Per-slot caches.**  Decode caches are stacked along a leading slot
+  axis over batch-1 caches, so every slot carries its *own* position
+  vector — the one thing the shared-batch decode step cannot express
+  (its ``index`` is a single scalar for the whole batch).  The decode
+  step is ``jax.vmap`` over slots with ``in_axes=(None, 0, 0, 0)``; a
+  greedy run over equal-length prompts is token-identical to the static
+  engine (regression-tested).
+* **Admission.**  ``SlotScheduler`` + ``KVBlockAllocator``: FIFO, a
+  request is admitted only when a slot is free AND the shared block pool
+  covers prompt + ``max_new_tokens`` (conservative reservation, no
+  preemption).  Prefill runs batch-1 at the exact prompt length (no
+  left-padding — pad tokens would attend), and its caches are written
+  into the slot with one ``dynamic_update_slice`` per cache leaf.
+* **Latency decomposition.**  Every request's lifecycle stamps (queue
+  wait / TTFT / per-token decode) are taken on the engine clock; the
+  clock is injectable (``clock=...``) so tests drive arrivals on virtual
+  time and the ``serve.load_sweep`` experiment uses the wall clock.
+* **Idle hook.**  When a loop iteration has nothing to decode or admit
+  (traffic gap), ``run(..., idle_hook=...)`` invokes the hook — the
+  load-sweep experiment mounts a probe kernel there and reports its
+  achieved FLOP/s as the compute headroom left beside the traffic, the
+  paper's question transposed to serving.
+
+Inactive slots decode garbage (fixed shapes keep one compiled step); the
+results are masked on the host and every admission overwrites the whole
+slot cache, so garbage never leaks into a live request.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import runtime
+from repro.configs.base import ArchConfig
+from repro.models import registry
+from repro.serve.kv import KVBlockAllocator, blocks_for
+from repro.serve.scheduler import ServeRequest, SlotScheduler
+
+
+@dataclass(frozen=True)
+class StepEvent:
+    """One working engine-loop iteration, for observability (tests assert
+    on it).  Idle iterations (traffic gaps) are not logged — they are
+    counted in ``ContinuousEngine.idle_iters`` — so ``step_log`` growth is
+    bounded by work done, not by wall time spent waiting."""
+    now: float
+    admitted: tuple            # rids whose prefill ran this iteration
+    decoded: tuple             # rids advanced by this iteration's decode step
+    queued: int                # requests still waiting after admission
+
+
+class ContinuousEngine:
+    """Slot-based continuous batching over the family decode step.
+
+    ``n_slots`` is the decode batch width; ``cache_len`` the per-slot KV
+    capacity; ``block_size``/``kv_blocks`` configure the shared block
+    pool (default: exactly enough blocks to cover every slot, so memory
+    admission binds only when configured tighter than the slots).
+    """
+
+    IDLE_SLEEP_S = 5e-4   # traffic-gap wait when no idle_hook is mounted:
+    #                       well under a decode step, so arrival latency
+    #                       stays negligible while the loop stops spinning
+
+    def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
+                 cache_len: int = 128, block_size: int = 16,
+                 kv_blocks: Optional[int] = None,
+                 prefill_per_step: Optional[int] = None,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        self.clock = clock
+        if kv_blocks is None:
+            kv_blocks = n_slots * blocks_for(cache_len, block_size)
+        self.kv = KVBlockAllocator(n_blocks=kv_blocks, block_size=block_size)
+        self.scheduler = SlotScheduler(n_slots, self.kv)
+        if prefill_per_step is None:
+            prefill_per_step = int(runtime.policy()["serve_prefill_per_step"])
+        self.prefill_per_step = max(1, prefill_per_step)
+        self.step_log: list[StepEvent] = []
+        self.idle_iters = 0
+
+        def _prefill(params, tokens):
+            return registry.prefill(cfg, params, {"tokens": tokens},
+                                    cache_len=cache_len)
+
+        def _slot_decode(params, tokens, index, caches):
+            return registry.decode_step(
+                cfg, params, {"tokens": tokens, "index": index}, caches)
+
+        def _insert(caches, slot_caches, slot):
+            return jax.tree_util.tree_map(
+                lambda c, p: jax.lax.dynamic_update_slice_in_dim(
+                    c, p[None].astype(c.dtype), slot, axis=0),
+                caches, slot_caches)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(jax.vmap(_slot_decode,
+                                        in_axes=(None, 0, 0, 0)),
+                               donate_argnums=3)
+        self._insert = jax.jit(_insert, donate_argnums=0)
+
+        base = registry.init_decode_caches(cfg, 1, cache_len)
+        self._caches = jax.tree_util.tree_map(
+            lambda a: jnp.stack([a] * n_slots), base)
+        self._tok = np.zeros((n_slots,), np.int32)
+        self._idx = np.zeros((n_slots,), np.int32)
+
+    # -- submission --------------------------------------------------------
+
+    def _validate(self, req: ServeRequest) -> None:
+        if req.max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, "
+                             f"got {req.max_new_tokens}")
+        lifetime = len(req.prompt) + req.max_new_tokens
+        if lifetime > self.cache_len:
+            raise ValueError(
+                f"request needs {lifetime} cache positions "
+                f"(prompt {len(req.prompt)} + {req.max_new_tokens} new), "
+                f"engine cache_len is {self.cache_len}")
+        if self.kv.blocks_for(lifetime) > self.kv.n_blocks:
+            raise ValueError(
+                f"request needs {self.kv.blocks_for(lifetime)} KV blocks, "
+                f"pool holds {self.kv.n_blocks}")
+
+    # -- engine steps ------------------------------------------------------
+
+    def _admit_one(self, now: float) -> Optional[int]:
+        """Admit + prefill the head-of-queue request, if admissible."""
+        adm = self.scheduler.admit(now)
+        if adm is None:
+            return None
+        slot, req = adm
+        logits, slot_caches = self._prefill(
+            self.params, jnp.asarray(req.prompt, jnp.int32)[None])
+        first = int(jnp.argmax(logits[0, -1]))
+        self._caches = self._insert(self._caches, slot_caches,
+                                    jnp.int32(slot))
+        self._tok[slot] = first
+        self._idx[slot] = len(req.prompt)
+        req.generated.append(first)
+        req.t_first_token = self.clock() - self._t0
+        if len(req.generated) >= req.max_new_tokens:
+            self.scheduler.complete(slot, req.t_first_token)
+            self._reset_slot(slot)
+        return req.rid
+
+    def _decode_once(self) -> list[int]:
+        """One synchronized decode step for every active slot."""
+        active = self.scheduler.active()
+        t_start = self.clock() - self._t0
+        logits, self._caches = self._decode(
+            self.params, jnp.asarray(self._tok)[:, None, None],
+            jnp.asarray(self._idx), self._caches)
+        nxt = np.asarray(jnp.argmax(logits[:, 0, -1], axis=-1))  # host sync
+        now = self.clock() - self._t0
+        decoded = []
+        for slot, req in active:
+            tok = int(nxt[slot])
+            req.generated.append(tok)
+            req.decode_token_s.append(now - t_start)
+            self._tok[slot] = tok
+            self._idx[slot] += 1
+            decoded.append(req.rid)
+            if len(req.generated) >= req.max_new_tokens:
+                self.scheduler.complete(slot, now)
+                self._reset_slot(slot)
+        return decoded
+
+    def _reset_slot(self, slot: int) -> None:
+        # keep the garbage decode of a free slot inside the cache bounds;
+        # the next admission overwrites the whole slot cache anyway
+        self._tok[slot] = 0
+        self._idx[slot] = 0
+
+    # -- run loop ----------------------------------------------------------
+
+    def run(self, requests: list[ServeRequest],
+            idle_hook: Optional[Callable[[], None]] = None
+            ) -> list[ServeRequest]:
+        """Serve ``requests`` (with ``arrival_s`` offsets) to completion.
+
+        The loop each iteration: ingest arrivals, admit + prefill up to
+        ``prefill_per_step`` queued requests, run one decode step for the
+        active slots — prefill interleaved with decode, not run ahead of
+        it.  With nothing to decode or admit (a traffic gap) the
+        ``idle_hook`` runs instead (default: a short sleep, so waiting
+        for the next arrival neither pegs a core nor grows ``step_log``
+        — idle iterations are counted in ``idle_iters``, not logged); the
+        loop ends when every submitted request is done.  Returns
+        ``requests`` in the order given.
+        """
+        if self.scheduler.n_active or self.scheduler.pending:
+            raise RuntimeError(
+                "engine already has requests in flight; run() is not "
+                "reentrant — wait for the previous run to complete")
+        for r in requests:
+            self._validate(r)
+        self.step_log = []
+        self.idle_iters = 0
+        arrivals = sorted(requests, key=lambda r: r.arrival_s)
+        n_seen = 0
+        self._t0 = self.clock()
+        while n_seen < len(arrivals) or self.scheduler.has_work:
+            now = self.clock() - self._t0
+            while n_seen < len(arrivals) \
+                    and arrivals[n_seen].arrival_s <= now:
+                self.scheduler.submit(arrivals[n_seen], now)
+                n_seen += 1
+            admitted = []
+            for _ in range(self.prefill_per_step):
+                rid = self._admit_one(self.clock() - self._t0)
+                if rid is None:
+                    break
+                admitted.append(rid)
+            decoded = self._decode_once() if self.scheduler.n_active else []
+            if not admitted and not decoded:
+                self.idle_iters += 1
+                if idle_hook is not None:
+                    idle_hook()
+                else:
+                    time.sleep(self.IDLE_SLEEP_S)
+                continue
+            self.step_log.append(StepEvent(
+                now=now, admitted=tuple(admitted), decoded=tuple(decoded),
+                queued=len(self.scheduler.pending)))
+        return requests
+
+    def generate(self, requests: list[ServeRequest]) -> list[ServeRequest]:
+        """Static-API convenience: all requests arrive at t=0."""
+        for r in requests:
+            r.arrival_s = 0.0
+        return self.run(requests)

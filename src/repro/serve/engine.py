@@ -1,9 +1,13 @@
-"""Batched serving engine: prefill queue + synchronous decode batch.
+"""Static batched serving engine: one batch, run to completion.
 
-A deliberately compact production shape: requests accumulate in a queue,
-prefill runs per-request (padded to the bucket), decode advances the whole
-batch one token per call.  Greedy sampling (argmax) keeps tests
-deterministic; temperature sampling is a one-liner swap.
+The *reference* serving path: a whole batch is left-padded to a common
+prompt length, prefilled together, and decoded in lockstep until every
+request finishes.  Greedy sampling (argmax) keeps tests deterministic.
+The production path is ``serve.continuous.ContinuousEngine`` (slot-based
+admission, per-slot KV positions, latency decomposition — DESIGN.md
+section 11); this engine stays as the regression baseline it is
+token-identical to on equal-length prompts, and as the static arm of the
+``serve.continuous_vs_static`` experiment.
 """
 from __future__ import annotations
 
@@ -46,7 +50,13 @@ class Engine:
 
     def generate(self, requests: list[Request]) -> list[Request]:
         """Run a full batch of requests to completion (greedy)."""
-        assert len(requests) <= self.batch
+        if not requests:        # nothing to do — and nothing to pad from
+            return []
+        if len(requests) > self.batch:
+            raise ValueError(
+                f"batch of {len(requests)} requests exceeds engine "
+                f"batch_size={self.batch}; split the request list or "
+                f"build the Engine with a larger batch_size")
         reqs = list(requests)
         while len(reqs) < self.batch:  # pad batch with dummies
             reqs.append(Request(prompt=reqs[0].prompt, max_new_tokens=0))

@@ -1,0 +1,92 @@
+"""Per-request KV-cache accounting: fixed-size block allocation + recycling.
+
+The serving engine admits a request only when the shared block pool can
+cover its whole lifetime (prompt + ``max_new_tokens``), vLLM-style block
+granularity with conservative up-front reservation: an admitted request
+can never stall mid-decode waiting for memory, so the scheduler needs no
+preemption path.  Blocks are bookkeeping over the engine's dense per-slot
+cache (see DESIGN.md section 11): each block covers ``block_size``
+consecutive token positions of one request's cache, and the pool being
+*shared* across slots is what makes admission a memory decision, not just
+a slot decision — a free slot with an exhausted pool stays empty, which
+is exactly the HBM-pressure behavior the ``serve.load_sweep``
+characterization wants observable.
+
+Invariants (property-tested in ``tests/test_serve_scheduler.py``):
+every block is free or owned by exactly one request; a request's table
+never shrinks while live; ``release`` returns every owned block, so after
+a full sweep the pool is back to ``n_blocks`` free.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Blocks covering ``n_tokens`` positions at ``block_size`` granularity."""
+    assert block_size > 0
+    return -(-max(n_tokens, 0) // block_size)
+
+
+@dataclass
+class KVBlockAllocator:
+    """Fixed-size block pool with per-request block tables."""
+    n_blocks: int
+    block_size: int
+    _free: list = field(default_factory=list)       # LIFO free stack
+    _tables: dict = field(default_factory=dict)     # rid -> [block ids]
+
+    def __post_init__(self):
+        assert self.n_blocks > 0 and self.block_size > 0
+        self._free = list(range(self.n_blocks - 1, -1, -1))
+
+    # -- capacity ----------------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return blocks_for(n_tokens, self.block_size)
+
+    def can_reserve(self, n_tokens: int) -> bool:
+        return self.blocks_for(n_tokens) <= len(self._free)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def reserve(self, rid: int, n_tokens: int) -> list[int]:
+        """Allocate the full block table for a request's lifetime tokens."""
+        if rid in self._tables:
+            raise ValueError(f"request {rid} already holds KV blocks")
+        need = self.blocks_for(n_tokens)
+        if need > len(self._free):
+            raise ValueError(
+                f"KV pool exhausted: request {rid} needs {need} blocks "
+                f"({n_tokens} tokens at block_size={self.block_size}), "
+                f"{len(self._free)} free of {self.n_blocks}")
+        table = [self._free.pop() for _ in range(need)]
+        self._tables[rid] = table
+        return list(table)
+
+    def table(self, rid: int) -> list[int]:
+        return list(self._tables[rid])
+
+    def release(self, rid: int) -> int:
+        """Return every block owned by ``rid`` to the pool."""
+        table = self._tables.pop(rid)
+        self._free.extend(reversed(table))
+        return len(table)
+
+    # -- invariants --------------------------------------------------------
+
+    def check(self) -> None:
+        """Assert the pool invariants (tests call this after every step)."""
+        owned = [b for t in self._tables.values() for b in t]
+        assert len(owned) == len(set(owned)), "block double-assigned"
+        assert not set(owned) & set(self._free), "owned block also free"
+        assert len(owned) + len(self._free) == self.n_blocks, \
+            (len(owned), len(self._free), self.n_blocks)

@@ -1,0 +1,51 @@
+"""Synthetic load generator for the serving characterization.
+
+Produces deterministic request streams for an *offered load* (requests
+per second): seeded prompt tokens, a fixed cycle of prompt lengths (so
+the engine compiles one prefill per distinct length, not per request),
+and either evenly spaced or Poisson arrivals.  The ``serve.load_sweep``
+experiment drives the engine with streams at multiples of its measured
+capacity — the serving transposition of the paper's pktgen delay sweep,
+where offered load replaces injected delay as the independent variable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.serve.scheduler import ServeRequest
+
+
+@dataclass(frozen=True)
+class LoadSpec:
+    """One offered-load level of synthetic traffic."""
+    n_requests: int
+    rate_rps: float = 0.0               # 0 = burst: everything at t=0
+    prompt_lens: tuple = (8, 16)        # cycled; bounds prefill recompiles
+    max_new_tokens: int = 8
+    vocab_size: int = 512
+    seed: int = 0
+    arrivals: str = "uniform"           # uniform | poisson
+
+
+def make_requests(spec: LoadSpec) -> list[ServeRequest]:
+    """The request stream for ``spec`` — deterministic in ``spec``."""
+    assert spec.n_requests > 0
+    assert spec.arrivals in ("uniform", "poisson"), spec.arrivals
+    rng = np.random.RandomState(spec.seed)
+    if spec.rate_rps <= 0:
+        offsets = np.zeros(spec.n_requests)
+    elif spec.arrivals == "poisson":
+        gaps = rng.exponential(1.0 / spec.rate_rps, size=spec.n_requests)
+        offsets = np.cumsum(gaps) - gaps[0]     # first arrival at t=0
+    else:
+        offsets = np.arange(spec.n_requests) / spec.rate_rps
+    out = []
+    for i in range(spec.n_requests):
+        plen = spec.prompt_lens[i % len(spec.prompt_lens)]
+        prompt = rng.randint(0, spec.vocab_size, size=plen).astype(np.int32)
+        out.append(ServeRequest(prompt=prompt,
+                                max_new_tokens=spec.max_new_tokens,
+                                arrival_s=float(offsets[i])))
+    return out

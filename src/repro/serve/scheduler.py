@@ -1,0 +1,174 @@
+"""Slot scheduler: request lifecycle + admission for continuous batching.
+
+A ``ServeRequest`` moves ``queued -> prefill -> decode -> done``; the
+state is derived from its latency stamps rather than stored, so the
+lifecycle record doubles as the latency decomposition the Records carry
+(queue wait, TTFT, per-token decode — DESIGN.md section 11):
+
+    t_enqueue ----- t_admit ----- t_first_token ----- t_done
+       |  queue wait   |   prefill     |   decode (TPOT)  |
+       `------------- TTFT ------------'
+
+The ``SlotScheduler`` owns the decode-batch slots and the admission
+decision: a queued request is admitted as soon as (a) a slot is free and
+(b) the KV block pool covers its whole lifetime (``kv.KVBlockAllocator``,
+conservative reservation — no preemption needed).  Admission order is
+FIFO; the engine interleaves one admission's prefill with the in-flight
+decode batch each step, which is the continuous-batching property the
+mixed-arrival test observes.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.serve.kv import KVBlockAllocator
+
+
+@dataclass
+class ServeRequest:
+    """One request plus its lifecycle stamps (engine-clock seconds)."""
+    prompt: np.ndarray                  # (S,) int32 token ids
+    max_new_tokens: int = 16
+    arrival_s: float = 0.0              # offered arrival, relative to run start
+    rid: int = -1                       # assigned at submit
+    generated: list = field(default_factory=list)
+    done: bool = False
+    # latency decomposition stamps, filled as the lifecycle advances
+    t_enqueue: Optional[float] = None
+    t_admit: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+    decode_token_s: list = field(default_factory=list)  # per token after first
+
+    @property
+    def state(self) -> str:
+        if self.t_done is not None:
+            return "done"
+        if self.t_first_token is not None:
+            return "decode"
+        if self.t_admit is not None:
+            return "prefill"
+        return "queued"
+
+    # -- derived latency metrics (None until the stage completed) ----------
+
+    @property
+    def queue_wait_s(self) -> Optional[float]:
+        if self.t_admit is None or self.t_enqueue is None:
+            return None
+        return self.t_admit - self.t_enqueue
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Time to first token, from arrival (includes queue wait)."""
+        if self.t_first_token is None or self.t_enqueue is None:
+            return None
+        return self.t_first_token - self.t_enqueue
+
+    @property
+    def prefill_s(self) -> Optional[float]:
+        if self.t_first_token is None or self.t_admit is None:
+            return None
+        return self.t_first_token - self.t_admit
+
+    @property
+    def tpot_s(self) -> Optional[float]:
+        """Mean time per output token over the decode stage."""
+        if not self.decode_token_s:
+            return None
+        return float(sum(self.decode_token_s) / len(self.decode_token_s))
+
+    @property
+    def total_s(self) -> Optional[float]:
+        if self.t_done is None or self.t_enqueue is None:
+            return None
+        return self.t_done - self.t_enqueue
+
+
+class SlotScheduler:
+    """FIFO admission into a fixed set of decode-batch slots."""
+
+    def __init__(self, n_slots: int, kv: KVBlockAllocator):
+        assert n_slots > 0
+        self.n_slots = n_slots
+        self.kv = kv
+        self.pending: deque[ServeRequest] = deque()
+        self.slots: list[Optional[ServeRequest]] = [None] * n_slots
+        self._next_rid = 0
+
+    # -- queue -------------------------------------------------------------
+
+    def submit(self, req: ServeRequest, now: float) -> int:
+        """Enqueue an arrived request; stamps ``t_enqueue`` at its offered
+        arrival time (queueing delay starts at arrival, not at the first
+        loop iteration that notices it)."""
+        req.rid = self._next_rid
+        self._next_rid += 1
+        req.t_enqueue = req.arrival_s if req.arrival_s <= now else now
+        self.pending.append(req)
+        return req.rid
+
+    # -- admission ---------------------------------------------------------
+
+    def free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slots):
+            if r is None:
+                return i
+        return None
+
+    def admit(self, now: float) -> Optional[tuple[int, ServeRequest]]:
+        """Admit the head-of-queue request if a slot AND KV blocks are free.
+
+        Returns ``(slot, request)`` with the KV table reserved and
+        ``t_admit`` stamped, or None when nothing is admissible (empty
+        queue, no free slot, or pool pressure — FIFO blocks rather than
+        skipping ahead, so admission order never starves a large request).
+        """
+        if not self.pending:
+            return None
+        slot = self.free_slot()
+        if slot is None:
+            return None
+        req = self.pending[0]
+        lifetime = len(req.prompt) + req.max_new_tokens
+        if not self.kv.can_reserve(lifetime):
+            return None
+        self.pending.popleft()
+        self.kv.reserve(req.rid, lifetime)
+        assert self.slots[slot] is None, "slot double-assigned"
+        self.slots[slot] = req
+        req.t_admit = now
+        return slot, req
+
+    # -- decode batch ------------------------------------------------------
+
+    def active(self) -> list[tuple[int, ServeRequest]]:
+        return [(i, r) for i, r in enumerate(self.slots) if r is not None]
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self.slots)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.pending) or self.n_active > 0
+
+    def complete(self, slot: int, now: float) -> ServeRequest:
+        """Retire a finished request: stamp, free its KV blocks, free slot."""
+        req = self.slots[slot]
+        assert req is not None, f"slot {slot} already free"
+        req.t_done = now
+        req.done = True
+        self.kv.release(req.rid)
+        self.slots[slot] = None
+        return req
+
+    def check(self) -> None:
+        """Assert scheduler invariants (tests call this after every step)."""
+        live = [r.rid for r in self.slots if r is not None]
+        assert len(live) == len(set(live)), "request in two slots"
+        self.kv.check()

@@ -151,10 +151,13 @@ def test_builtin_registrations_cover_all_families():
     reg.load_builtin()
     fams = {s.family for s in all_experiments()}
     assert {"headroom", "stressors", "classes", "inpath",
-            "roofline"} <= fams
+            "roofline", "serve"} <= fams
     assert reg.get("inpath.collectives").requires_devices == 2
     assert reg.get("inpath.bucketing").requires_devices == 2
     assert reg.get("inpath.headroom_overlap").requires_devices == 2
+    # the serving family runs on a single device (the engine is local)
+    assert reg.get("serve.load_sweep").requires_devices == 1
+    assert reg.get("serve.continuous_vs_static").requires_devices == 1
 
 
 def test_inpath_skips_on_single_device():
@@ -346,6 +349,29 @@ def test_repo_baseline_stream_parses_and_covers_overlap():
         assert "git_commit" not in r.params
 
 
+def test_repo_baseline_serve_stream_covers_load_levels():
+    """The curated serve baseline must keep the acceptance-defining rows:
+    sustained throughput, p50/p99 TTFT/TPOT, and probe headroom at >= 3
+    offered-load levels, plus both engine-comparison arms."""
+    import os
+    bdir = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                        "experiments", "records", "baseline")
+    from repro.experiments.diff import read_stream
+    idx = read_stream(bdir)
+    levels = {name for (exp, name, metric) in idx
+              if exp == "serve.load_sweep" and metric == "tokens_per_sec"
+              and name.startswith("load_")}
+    assert len(levels) >= 3, levels
+    for metric in ("ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s",
+                   "headroom_flops_per_s"):
+        have = {name for (exp, name, m) in idx
+                if exp == "serve.load_sweep" and m == metric}
+        assert levels <= have, metric
+    arms = {name for (exp, name, metric) in idx
+            if exp == "serve.continuous_vs_static"}
+    assert arms == {"static", "continuous"}
+
+
 def test_runner_stamps_git_commit_in_params(temp_experiment):
     import subprocess
     sha = subprocess.run(["git", "rev-parse", "HEAD"], capture_output=True,
@@ -420,3 +446,37 @@ def test_make_plan_from_record_stream_end_to_end():
     assert plan.ranking  # populated from the (non-skipped) records
     names = [n for n, _ in plan.ranking]
     assert "allreduce" not in names  # skipped records never ranked
+    assert plan.serve_offload is None  # no serve stream provided
+
+
+def test_planner_serve_offload_rule():
+    """Rule 5: serve-side offload only while the probe headroom beside the
+    engine clears the policy floor at every *sustained* load level."""
+    from repro import runtime
+
+    def hr(name, flops, sustained=True):
+        return Record("serve.load_sweep", name, "headroom_flops_per_s",
+                      flops, unit="flop/s",
+                      params={"sustained": sustained})
+
+    recs = [hr("probe_idle", 20e9),          # reference row, never a level
+            hr("load_0.25x", 5e9), hr("load_1x", 2e9),
+            hr("load_2x", 0.0, sustained=False)]   # past saturation
+    a = planner.serve_offload_assessment(recs, min_headroom_flops=1e9)
+    assert a["profitable"] and a["worst_headroom_flops"] == 2e9
+    assert a["sustained_levels"] == ["load_0.25x", "load_1x"]
+    assert not planner.serve_offload_assessment(
+        recs, min_headroom_flops=3e9)["profitable"]
+
+    # through make_plan, with the threshold from the runtime policy knob
+    terms = RooflineTerms(0.01, 0.004, 0.02)
+    assert planner.make_plan(terms, [], serve_records=recs).serve_offload
+    with runtime.use_policy(serve_headroom_min_gflops=10.0):
+        plan = planner.make_plan(terms, [], serve_records=recs)
+    assert plan.serve_offload is False
+    assert any("serve offload OFF" in n for n in plan.notes)
+
+    # nothing sustained -> never profitable (rule 2: saturated engine)
+    sat = [hr("load_2x", 9e9, sustained=False)]
+    assert not planner.serve_offload_assessment(
+        sat, min_headroom_flops=1e9)["profitable"]

@@ -1,0 +1,130 @@
+"""Hypothesis property tests on the serving scheduler + KV allocator.
+
+Model-free: the property loop drives the real ``SlotScheduler`` and
+``KVBlockAllocator`` through the same admit/decode/complete sequence the
+continuous engine performs, with token generation simulated — so the
+scheduling invariants are exercised over thousands of workloads without
+touching jax.  The engine-with-model end-to-end checks live in
+``tests/test_serving.py``.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the hypothesis package")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serve.kv import KVBlockAllocator, blocks_for  # noqa: E402
+from repro.serve.scheduler import ServeRequest, SlotScheduler  # noqa: E402
+
+settings.register_profile("ci-serve", max_examples=40, deadline=None)
+settings.load_profile("ci-serve")
+
+
+# ---------------------------------------------------------------------------
+# allocator alone
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 64), st.integers(1, 8),
+       st.lists(st.integers(1, 40), max_size=20))
+def test_kv_reserve_release_roundtrip(n_blocks, block_size, sizes):
+    kv = KVBlockAllocator(n_blocks=n_blocks, block_size=block_size)
+    live = {}
+    for rid, n_tokens in enumerate(sizes):
+        if kv.can_reserve(n_tokens):
+            table = kv.reserve(rid, n_tokens)
+            assert len(table) == blocks_for(n_tokens, block_size)
+            live[rid] = table
+        kv.check()
+    # every block is free or owned by exactly one live request
+    owned = [b for t in live.values() for b in t]
+    assert len(owned) == len(set(owned))
+    # release everything (arbitrary order): the pool must fully recover
+    for rid in sorted(live, key=lambda r: -r):
+        assert kv.release(rid) == len(live[rid])
+        kv.check()
+    assert kv.n_free == kv.n_blocks
+
+
+def test_kv_reserve_errors():
+    kv = KVBlockAllocator(n_blocks=4, block_size=2)
+    kv.reserve(0, 5)                       # 3 blocks
+    with pytest.raises(ValueError, match="already holds"):
+        kv.reserve(0, 1)
+    with pytest.raises(ValueError, match="exhausted"):
+        kv.reserve(1, 4)                   # 2 blocks > 1 free
+    kv.release(0)
+    assert kv.n_free == 4
+
+
+# ---------------------------------------------------------------------------
+# scheduler + allocator, driven like the engine drives them
+# ---------------------------------------------------------------------------
+
+req_strategy = st.tuples(st.integers(1, 12),     # prompt length
+                         st.integers(1, 8),      # max_new_tokens
+                         st.integers(0, 20))     # arrival step
+
+
+def _drive(n_slots, n_blocks, block_size, specs):
+    """The continuous engine's scheduling loop, with decode simulated:
+    each iteration ingests arrivals, admits at most one request (its
+    'prefill' yields the first token), then advances every active slot
+    one token.  Returns the admissible requests after the full sweep."""
+    kv = KVBlockAllocator(n_blocks=n_blocks, block_size=block_size)
+    sched = SlotScheduler(n_slots, kv)
+    reqs = [ServeRequest(prompt=np.zeros(p, np.int32), max_new_tokens=m,
+                         arrival_s=float(a)) for p, m, a in specs
+            # requests larger than the whole pool can never be admitted;
+            # the engine rejects them at submit (ValueError)
+            if blocks_for(p + m, block_size) <= n_blocks]
+    arrivals = sorted(reqs, key=lambda r: r.arrival_s)
+    seen, t, iters = 0, 0.0, 0
+    while seen < len(arrivals) or sched.has_work:
+        iters += 1
+        assert iters < 10_000, "scheduler stopped making progress"
+        t += 1.0
+        while seen < len(arrivals) and arrivals[seen].arrival_s <= t:
+            sched.submit(arrivals[seen], t)
+            seen += 1
+        adm = sched.admit(t)
+        if adm is not None:
+            slot, req = adm
+            req.generated.append(0)            # prefill's first token
+            req.t_first_token = t
+            if len(req.generated) >= req.max_new_tokens:
+                sched.complete(slot, t)
+        for slot, req in sched.active():
+            req.generated.append(1)
+            req.decode_token_s.append(1.0)
+            if len(req.generated) >= req.max_new_tokens:
+                sched.complete(slot, t)
+        sched.check()                          # no double assignment, pool
+        #                                        consistent, every step
+    return reqs, kv, sched
+
+
+@given(st.integers(1, 4), st.integers(2, 24), st.integers(1, 4),
+       st.lists(req_strategy, min_size=1, max_size=12))
+def test_sweep_completes_exactly_and_recycles(n_slots, n_blocks, block_size,
+                                              specs):
+    reqs, kv, sched = _drive(n_slots, n_blocks, block_size, specs)
+    # every admitted request completed with exactly max_new_tokens tokens
+    for r in reqs:
+        assert r.done and r.state == "done"
+        assert len(r.generated) == r.max_new_tokens, (
+            len(r.generated), r.max_new_tokens)
+    # KV blocks fully recycled after the sweep
+    assert kv.n_free == kv.n_blocks
+    assert sched.n_active == 0 and not sched.pending
+
+
+@given(st.integers(1, 4), st.integers(2, 24), st.integers(1, 4),
+       st.lists(req_strategy, min_size=1, max_size=12))
+def test_lifecycle_stamps_monotone(n_slots, n_blocks, block_size, specs):
+    reqs, _, _ = _drive(n_slots, n_blocks, block_size, specs)
+    for r in reqs:
+        assert r.t_enqueue <= r.t_admit <= r.t_first_token <= r.t_done
+        assert r.queue_wait_s >= 0 and r.ttft_s >= 0 and r.total_s >= 0
+        # decode tokens exist iff the request decoded past its first token
+        assert len(r.decode_token_s) == r.max_new_tokens - 1

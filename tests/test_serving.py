@@ -1,7 +1,10 @@
 """Serving correctness: prefill+decode == teacher-forced forward, per family;
-SWA ring-buffer decode; engine end-to-end greedy decode."""
+SWA ring-buffer decode; engine end-to-end greedy decode; the
+continuous-batching engine (token-identical to the static path, mixed
+arrivals admitted into an in-flight decode batch, KV recycling)."""
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.configs import all_archs, smoke
@@ -93,3 +96,201 @@ def test_engine_greedy_generation(rng):
                      max_new_tokens=4)]
     out2 = eng.generate(reqs2)
     assert out2[0].generated == out[0].generated
+
+
+def test_engine_generate_empty_list(rng):
+    """Regression: dummy-padding read ``reqs[0].prompt`` before checking the
+    list was non-empty — an empty submission must return empty, not crash."""
+    from repro.launch.mesh import make_mesh
+    from repro.serve.engine import Engine
+    c = smoke(all_archs()["olmo-1b"])
+    params = registry.init_params(c, rng)
+    eng = Engine(c, make_mesh((1, 1), ("data", "model")), batch_size=2,
+                 cache_len=64, params=params)
+    assert eng.generate([]) == []
+
+
+def test_engine_generate_oversize_batch_raises(rng):
+    from repro.launch.mesh import make_mesh
+    from repro.serve.engine import Engine, Request
+    c = smoke(all_archs()["olmo-1b"])
+    params = registry.init_params(c, rng)
+    eng = Engine(c, make_mesh((1, 1), ("data", "model")), batch_size=2,
+                 cache_len=64, params=params)
+    reqs = [Request(prompt=np.arange(4, dtype=np.int32), max_new_tokens=2)
+            for _ in range(3)]
+    with pytest.raises(ValueError, match="exceeds engine batch_size"):
+        eng.generate(reqs)
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching engine
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def serve_cfg_params():
+    c = smoke(all_archs()["olmo-1b"])
+    return c, registry.init_params(c, jax.random.key(0))
+
+
+def test_continuous_token_identical_to_static(serve_cfg_params):
+    """A greedy run through the continuous engine must reproduce the static
+    run-to-completion engine token for token on equal-length prompts (the
+    static path left-pads mixed lengths, which legitimately changes its
+    logits — equal lengths isolate the scheduling rewrite)."""
+    from repro.launch.mesh import make_mesh
+    from repro.serve.continuous import ContinuousEngine
+    from repro.serve.engine import Engine, Request
+    from repro.serve.scheduler import ServeRequest
+    c, params = serve_cfg_params
+    prompts = [np.arange(8, dtype=np.int32) % c.vocab_size,
+               (np.arange(8, dtype=np.int32) + 3) % c.vocab_size]
+    static = Engine(c, make_mesh((1, 1), ("data", "model")), batch_size=2,
+                    cache_len=64, params=params)
+    out_s = static.generate([Request(prompt=p.copy(), max_new_tokens=6)
+                             for p in prompts])
+    cont = ContinuousEngine(c, params, n_slots=2, cache_len=64,
+                            block_size=8)
+    out_c = cont.generate([ServeRequest(prompt=p.copy(), max_new_tokens=6)
+                           for p in prompts])
+    assert [r.generated for r in out_c] == [r.generated for r in out_s]
+    # latency decomposition recorded for every request
+    for r in out_c:
+        assert r.state == "done"
+        assert r.ttft_s is not None and r.tpot_s is not None
+        assert r.t_enqueue <= r.t_admit <= r.t_first_token <= r.t_done
+
+
+def test_continuous_mixed_arrival_joins_inflight_batch(serve_cfg_params):
+    """The continuous-batching observable: a request arriving mid-decode is
+    admitted while the earlier request is still generating — not after the
+    batch drains — and both then decode in the same steps."""
+    from repro.serve.continuous import ContinuousEngine
+    from repro.serve.scheduler import ServeRequest
+    c, params = serve_cfg_params
+    tick = {"t": 0.0}
+
+    def vclock():             # virtual clock: arrivals in loop-step units
+        tick["t"] += 1.0
+        return tick["t"]
+
+    eng = ContinuousEngine(c, params, n_slots=2, cache_len=64,
+                           block_size=8, clock=vclock)
+    a = ServeRequest(prompt=np.arange(8, dtype=np.int32),
+                     max_new_tokens=12, arrival_s=0.0)
+    b = ServeRequest(prompt=(np.arange(8, dtype=np.int32) + 5),
+                     max_new_tokens=4, arrival_s=25.0)
+    eng.run([a, b])
+    # B was admitted strictly inside A's decode stage
+    assert a.t_first_token < b.t_admit < a.t_done
+    # the admission step also decoded A, and later steps decode both
+    adm = [e for e in eng.step_log if b.rid in e.admitted]
+    assert adm and a.rid in adm[0].decoded
+    assert any({a.rid, b.rid} <= set(e.decoded) for e in eng.step_log)
+    assert len(a.generated) == 12 and len(b.generated) == 4
+
+
+def test_continuous_mixed_lengths_complete_and_recycle(serve_cfg_params):
+    """Mixed prompt/generation lengths under KV pressure: every request
+    completes with exactly max_new_tokens, no slot is double-assigned, and
+    the block pool is fully recycled after the sweep."""
+    from repro.serve.continuous import ContinuousEngine
+    from repro.serve.loadgen import LoadSpec, make_requests
+    c, params = serve_cfg_params
+    # pool covers only ~1.5 requests' lifetime: admission must block on
+    # memory, then recover as blocks recycle
+    eng = ContinuousEngine(c, params, n_slots=2, cache_len=64,
+                           block_size=8, kv_blocks=5)
+    reqs = make_requests(LoadSpec(n_requests=5, rate_rps=0.0,
+                                  prompt_lens=(5, 8, 12), max_new_tokens=4,
+                                  vocab_size=c.vocab_size))
+    eng.run(reqs)
+    for r in reqs:
+        assert r.done and len(r.generated) == r.max_new_tokens
+    eng.scheduler.check()
+    assert eng.kv.n_free == eng.kv.n_blocks
+    assert eng.scheduler.n_active == 0
+
+
+def test_continuous_run_not_reentrant(serve_cfg_params):
+    from repro.serve.continuous import ContinuousEngine
+    from repro.serve.scheduler import ServeRequest
+    c, params = serve_cfg_params
+    eng = ContinuousEngine(c, params, n_slots=1, cache_len=32, block_size=8)
+    # simulate a run left mid-flight: a queued request that never drained
+    eng.scheduler.submit(ServeRequest(prompt=np.arange(4, dtype=np.int32),
+                                      max_new_tokens=2), now=0.0)
+    with pytest.raises(RuntimeError, match="not .?reentrant"):
+        eng.run([ServeRequest(prompt=np.arange(4, dtype=np.int32),
+                              max_new_tokens=2)])
+
+
+def test_loadgen_poisson_deterministic_and_sorted():
+    from repro.serve.loadgen import LoadSpec, make_requests
+    spec = LoadSpec(n_requests=6, rate_rps=10.0, arrivals="poisson", seed=4)
+    a = [r.arrival_s for r in make_requests(spec)]
+    b = [r.arrival_s for r in make_requests(spec)]
+    assert a == b == sorted(a) and a[0] == 0.0
+    assert a != [r.arrival_s for r in
+                 make_requests(LoadSpec(n_requests=6, rate_rps=10.0,
+                                        arrivals="uniform"))]
+
+
+def test_load_sweep_single_token_requests():
+    """max_new=1 finishes every request at prefill: the sweep must emit
+    its throughput/TTFT/headroom rows without TPOT rows (no decode
+    stage), not crash on an empty per-token latency pool."""
+    from repro.core import serving
+    recs = serving.load_sweep(duration=0.0, offered=(0.5,), n_slots=2,
+                              max_new=1, max_requests=4)
+    assert not any(r.error for r in recs)
+    metrics = {r.metric for r in recs if r.name.startswith("load_")}
+    assert "tokens_per_sec" in metrics and "ttft_p99_s" in metrics
+    assert "tpot_p50_s" not in metrics
+
+
+def test_continuous_rejects_oversize_requests(serve_cfg_params):
+    from repro.serve.continuous import ContinuousEngine
+    from repro.serve.scheduler import ServeRequest
+    c, params = serve_cfg_params
+    eng = ContinuousEngine(c, params, n_slots=1, cache_len=16, block_size=4)
+    with pytest.raises(ValueError, match="cache positions"):
+        eng.run([ServeRequest(prompt=np.arange(12, dtype=np.int32),
+                              max_new_tokens=8)])
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.run([ServeRequest(prompt=np.arange(4, dtype=np.int32),
+                              max_new_tokens=0)])
+
+
+def test_serve_load_sweep_emits_decomposed_records():
+    """The serve.load_sweep stream must carry the acceptance metrics at
+    >= 3 offered-load levels: sustained throughput, p50/p99 TTFT and TPOT,
+    and probe headroom FLOP/s beside the engine."""
+    from repro.core import serving
+    recs = serving.load_sweep(duration=0.02, offered=(0.25, 1.0, 2.0),
+                              n_slots=2, max_new=4, max_requests=8)
+    by_metric = {}
+    for r in recs:
+        assert not r.error
+        by_metric.setdefault(r.metric, []).append(r)
+    levels = {r.name for r in by_metric["tokens_per_sec"]
+              if r.name.startswith("load_")}
+    assert len(levels) >= 3
+    for metric in ("ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s",
+                   "headroom_flops_per_s"):
+        names = {r.name for r in by_metric[metric]
+                 if r.name.startswith("load_")}
+        assert levels <= names, metric
+    # the load-level latency params carry the queue-wait decomposition
+    lvl = [r for r in by_metric["tokens_per_sec"]
+           if r.name.startswith("load_")][0]
+    assert {"queue_wait_p50_s", "queue_wait_p99_s",
+            "prefill_p50_s"} <= set(lvl.params)
+    # the idle probe reference is the relative anchor
+    idle = [r for r in by_metric["headroom_flops_per_s"]
+            if r.name == "probe_idle"]
+    assert idle and idle[0].relative == 1.0
+    # the renderer consumes the stream
+    from repro.analysis.report import serve_table
+    tbl = serve_table(recs)
+    assert tbl.count("\n") >= 2 + len(levels) - 1 and "headroom" in tbl
