@@ -113,6 +113,75 @@ def serve_table(records: Iterable[Record]) -> str:
     return "\n".join(out)
 
 
+def fabric_table(records: Iterable[Record]) -> str:
+    """Degraded-fabric view of a ``fabric.*`` Record stream.
+
+    Collectives block: one row per (method, condition) with the two
+    schedules' degradation, the overlap efficiency and its delta vs the
+    clean wire.  Serve block: one row per condition with throughput, p99
+    inflation and surviving probe headroom.
+    """
+    coll: dict[str, dict] = {}
+    serve: dict[str, dict] = {}
+    for r in records:
+        if r.skipped or r.error:
+            continue
+        if r.experiment == "fabric.collectives_degraded":
+            d = coll.setdefault(r.name, {"params": {}})
+            d[r.metric] = r
+            d["params"].update(r.params)
+        elif r.experiment == "fabric.serve_tail":
+            d = serve.setdefault(r.name, {"params": {}})
+            d[r.metric] = r
+            d["params"].update(r.params)
+    out = []
+    if coll:
+        out += ["| method[condition] | serial x | pipelined x | "
+                "overlap eff | vs clean | goodput MB/s |",
+                "|---|---|---|---|---|---|"]
+        for name in sorted(coll):
+            lvl = coll[name]
+            deg = lvl.get("degradation_x")
+            eff = lvl.get("overlap_efficiency")
+            gp = lvl.get("wire_goodput_bytes_per_s")
+            if not (deg and eff):
+                out.append(f"| {name} | incomplete row | | | | |")
+                continue
+            out.append(
+                f"| {name} | {deg.value:.2f} "
+                f"| {deg.params.get('pipelined_degradation_x', 0):.2f} "
+                f"| {eff.value:.3f} "
+                f"| {eff.params.get('overlap_efficiency_delta', 0):+.3f} "
+                f"| {gp.value / 1e6:.1f} |" if gp else "")
+    if serve:
+        if out:
+            out.append("")
+        out += ["| condition | tok/s | vs clean | ttft p99 x | tpot p99 x "
+                "| headroom GFLOP/s | stalled ms |",
+                "|---|---|---|---|---|---|---|"]
+
+        def x(lvl, metric):
+            r = lvl.get(metric)
+            return f"{r.value:.2f}" if r and r.value is not None else "-"
+
+        for name in sorted(serve, key=lambda n: (n != "clean", n)):
+            lvl = serve[name]
+            p = lvl["params"]
+            tps = lvl.get("tokens_per_sec")
+            hr = lvl.get("headroom_flops_per_s")
+            if not (tps and hr):
+                out.append(f"| {name} | incomplete row | | | | | |")
+                continue
+            stalled = 1e3 * (p.get("stalled_admit_s", 0.0)
+                             + p.get("stalled_decode_s", 0.0))
+            out.append(
+                f"| {name} | {tps.value:.0f} | {tps.relative:.0%} "
+                f"| {x(lvl, 'ttft_p99_inflation_x')} "
+                f"| {x(lvl, 'tpot_p99_inflation_x')} "
+                f"| {hr.value / 1e9:.2f} | {stalled:.0f} |")
+    return "\n".join(out)
+
+
 def table(dirname: str = "experiments/dryrun", mesh: str = None) -> str:
     """The original roofline table over dry-run JSONs."""
     rows = []

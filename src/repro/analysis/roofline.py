@@ -223,7 +223,12 @@ def analyze(cfg: ArchConfig, shape: ShapeConfig, mesh_name: str,
         bottleneck=max(terms, key=terms.get),
         model_flops=mf, hlo_flops_global=hlo_global,
         useful_ratio=mf / hlo_global if hlo_global else 0.0,
-        peak_memory_bytes=float(ma.peak_memory_in_bytes),
+        # 0.4.x CompiledMemoryStats has no peak rollup; the components
+        # bound it from below (args + outputs + temps live concurrently)
+        peak_memory_bytes=float(getattr(
+            ma, "peak_memory_in_bytes",
+            ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes)),
         argument_bytes=float(ma.argument_size_in_bytes),
         collectives=dict(summ.to_dict(),
                          hbm_bytes_upper_bound=costs.hbm_bytes),

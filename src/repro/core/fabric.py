@@ -1,0 +1,307 @@
+"""Degraded-fabric characterization — every clean number, re-measured
+under a misbehaving wire.
+
+The paper's offload verdict is only trustworthy if it survives a
+degraded data path: the BlueField-2 looks attractive at line rate and
+collapses under stress, and the DPU follow-up literature (PAPERS.md)
+shows win/loss flipping under contention.  This family re-runs the two
+decision-driving measurements with a :class:`repro.fabric.FabricCondition`
+injected:
+
+``fabric.collectives_degraded``
+    ``inpath.headroom_overlap``'s rig — the bucketed reduction beside a
+    synthetic compute payload — swept over condition x method x schedule.
+    Per (method, condition): ``overlap_efficiency`` (t_pipelined /
+    t_serial, same paired-median protocol as inpath), ``degradation_x``
+    (serial wall vs the clean serial wall), and
+    ``wire_goodput_bytes_per_s`` (modeled wire bytes over degraded wall —
+    wire efficiency).  The headline effect: degradation collapses the
+    pipelined schedule's advantage (clean efficiency well below 1 rises
+    toward 1), because the degraded wire dominates the critical path on
+    *both* schedules — a straggler in particular serializes every chain
+    through the slow device — so the compute the pipeline used to hide
+    becomes a vanishing fraction of the step.  The planner's rule 1b
+    consumes exactly this efficiency delta.
+
+``fabric.serve_tail``
+    The continuous-batching load sweep pinned at one offered level and
+    re-run per condition with a ``ServeFabric`` mounted on the engine:
+    p99 TTFT/TPOT inflation vs the clean run (rule 5's input), sustained
+    throughput, and the idle-hook probe's surviving FLOP/s.  The token
+    streams themselves stay identical across conditions (greedy decode,
+    same requests) — only the latency surface moves.
+
+Both experiments put the clean condition first so every degraded row can
+carry its inflation/delta vs clean in the same stream.
+"""
+from __future__ import annotations
+
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import runtime
+from repro.core.inpath import _paired_ratio, _wire_bytes
+from repro.experiments.measure import measure as _measure
+from repro.experiments.record import Record
+from repro.fabric import ChainInjector, FabricCondition, ServeFabric, \
+    canonical_conditions
+from repro.parallel import collectives as C
+from repro.parallel import compat
+from repro.parallel import overlap as O
+
+EXPERIMENT_COLLECTIVES = "fabric.collectives_degraded"
+EXPERIMENT_SERVE = "fabric.serve_tail"
+
+# condition x method defaults: ring isolates the schedule effect (no
+# transform), int8_ring is the production compressed wire — the pair rule
+# 1 compares under degradation
+DEGRADED_METHODS = ("ring", "int8_ring")
+DEGRADED_CONDITIONS = ("clean", "jitter", "straggler", "lossy")
+SERVE_CONDITIONS = ("clean", "jitter", "straggler")
+
+FABRIC_BUCKETS = 4
+FABRIC_BUCKET_ELEMS = 1 << 14
+# the compute payload riding beside the wire: sized so its wall is the
+# same order as the clean reduction (a few ms) — small enough that a
+# degraded wire dominates it, which is the effect under test
+FABRIC_COMPUTE_DIM = 128
+FABRIC_COMPUTE_ITERS = 8
+
+
+def _resolve(names: Sequence[str]) -> list[FabricCondition]:
+    """Named canonical conditions, clean forced to the front — degraded
+    rows are relative to the clean row of the same run."""
+    canon = canonical_conditions()
+    conds = []
+    for name in names:
+        if name not in canon:
+            raise ValueError(f"unknown fabric condition {name!r} "
+                             f"(canonical: {sorted(canon)})")
+        conds.append(canon[name])
+    conds.sort(key=lambda c: 0 if c.is_clean else 1)
+    if not conds or not conds[0].is_clean:
+        conds.insert(0, FabricCondition.clean())
+    return conds
+
+
+def measure_collectives_degraded(
+        duration: float = 0.3,
+        methods: Sequence[str] = DEGRADED_METHODS,
+        conditions: Sequence[str] = DEGRADED_CONDITIONS,
+        n_buckets: int = FABRIC_BUCKETS,
+        bucket_elems: int = FABRIC_BUCKET_ELEMS,
+        compute_dim: int = FABRIC_COMPUTE_DIM,
+        compute_iters: int = FABRIC_COMPUTE_ITERS) -> list[Record]:
+    """Condition x method x schedule sweep of the bucketed reduction
+    beside a compute payload (the headroom_overlap rig, degraded)."""
+    n = len(jax.devices())
+    if n < 2:
+        raise RuntimeError("degraded-collectives measurement needs >= 2 "
+                           "devices (run under "
+                           "--xla_force_host_platform_device_count)")
+    mesh = compat.make_mesh((n,), ("pod",))
+    conds = _resolve(conditions)
+    for cond in conds:
+        if cond.straggler_device is not None and cond.straggler_device >= n:
+            raise RuntimeError(
+                f"condition {cond.name!r} designates straggler device "
+                f"{cond.straggler_device}, only {n} devices present")
+    ks = jax.random.split(jax.random.key(0), n_buckets)
+    tree = {f"w{i}": jax.random.normal(k, (n, bucket_elems), jnp.float32)
+            for i, k in enumerate(ks)}
+    want = {k: jnp.mean(v, axis=0, keepdims=True) for k, v in tree.items()}
+    specs = jax.tree_util.tree_map(lambda _: P("pod"), tree)
+    payloads = [4 * bucket_elems] * n_buckets
+    d = compute_dim
+    a = jax.random.normal(jax.random.key(9), (n, d, d), jnp.float32) / d
+
+    def synth_compute(m):
+        def body(c, _):
+            return jnp.tanh(c @ m), None
+        out, _ = jax.lax.scan(body, m, None, length=compute_iters)
+        return out
+
+    def step(method, overlapped, cond):
+        def fn(t, m):
+            return O.overlap_compute(
+                lambda: C.reduce_gradients(
+                    t, "pod", method, None, bucketed=True,
+                    bucket_bytes=bucket_elems * 4, overlap=overlapped,
+                    fabric=cond)[0],
+                synth_compute, m, overlap=overlapped)
+        return jax.jit(compat.shard_map(
+            fn, mesh=mesh, in_specs=(specs, P("pod")),
+            out_specs=(specs, P("pod")), check=False))
+
+    records: list[Record] = []
+    # pin the transform impl, as in inpath: this sweep isolates the wire
+    # scenario, not a kernel-placement switch
+    with runtime.use_policy(quant_impl="xla"):
+        for method in methods:
+            eff_clean = t_serial_clean = t_over_clean = None
+            wire = n_buckets * _wire_bytes(n, bucket_elems, method)
+            for cond in conds:
+                f_serial = step(method, False, cond)
+                f_over = step(method, True, cond)
+                out = f_serial(tree, a)         # correctness probe: the
+                err = max(float(jnp.max(jnp.abs(out[0][k] - want[k])))
+                          for k in tree)        # injection must be
+                out = f_over(tree, a)           # value-neutral
+                err = max(err,
+                          max(float(jnp.max(jnp.abs(out[0][k] - want[k])))
+                              for k in tree))
+                eff, t_serial, t_over, rounds = _paired_ratio(
+                    f_serial, f_over, (tree, a), duration)
+                # what this condition injected, re-sampled from the same
+                # seed the traced program used
+                inj = ChainInjector(cond, "pod", payloads)
+                base = dict(cond.params(), condition=cond.name,
+                            method=method, devices=n, n_buckets=n_buckets,
+                            bucket_elems=bucket_elems,
+                            compute_dim=d, compute_iters=compute_iters,
+                            t_serial_s=t_serial, t_overlapped_s=t_over,
+                            injected_common_s=inj.injected_s,
+                            paired_rounds=rounds, max_error=err,
+                            wire_bytes_per_device=wire)
+                if cond.is_clean:
+                    eff_clean, t_serial_clean, t_over_clean = \
+                        eff, t_serial, t_over
+                name = f"{method}[{cond.name}]"
+                records.append(Record(
+                    EXPERIMENT_COLLECTIVES, name, "overlap_efficiency",
+                    eff, unit="x", relative=eff,
+                    params=dict(base, overlap_efficiency_clean=eff_clean,
+                                overlap_efficiency_delta=eff - eff_clean)))
+                deg_serial = t_serial / t_serial_clean
+                deg_over = t_over / t_over_clean
+                records.append(Record(
+                    EXPERIMENT_COLLECTIVES, name, "degradation_x",
+                    deg_serial, unit="x", relative=deg_serial,
+                    params=dict(base, schedule="serial",
+                                pipelined_degradation_x=deg_over)))
+                goodput = wire / t_serial
+                records.append(Record(
+                    EXPERIMENT_COLLECTIVES, name,
+                    "wire_goodput_bytes_per_s", goodput, unit="B/s",
+                    relative=goodput / (wire / t_serial_clean),
+                    params=dict(base)))
+    return records
+
+
+def measure_serve_tail(duration: float = 0.3,
+                       conditions: Sequence[str] = SERVE_CONDITIONS,
+                       arch: str = "olmo-1b", n_slots: int = 4,
+                       cache_len: int = 64, block_size: int = 8,
+                       prompt_lens: tuple = (8, 16), max_new: int = 8,
+                       offered_mult: float = 0.5,
+                       max_requests: int = 24) -> list[Record]:
+    """One load level, re-served per fabric condition: tail inflation."""
+    from repro.core.serving import _make_probe, _pct, _smoke_engine
+    from repro.serve.loadgen import LoadSpec, make_requests
+
+    cfg, _, eng = _smoke_engine(arch, n_slots, cache_len, block_size)
+    run_probe, probe_flops = _make_probe()
+    conds = _resolve(conditions)
+    records: list[Record] = []
+
+    # burst calibration (also warms every compile out of the sweep)
+    cal = make_requests(LoadSpec(n_requests=2 * n_slots, rate_rps=0.0,
+                                 prompt_lens=prompt_lens,
+                                 max_new_tokens=max_new,
+                                 vocab_size=cfg.vocab_size))
+    eng.generate(cal)
+    cal2 = make_requests(LoadSpec(n_requests=2 * n_slots, rate_rps=0.0,
+                                  prompt_lens=prompt_lens,
+                                  max_new_tokens=max_new,
+                                  vocab_size=cfg.vocab_size, seed=1))
+    t0 = time.perf_counter()
+    eng.generate(cal2)
+    cal_el = time.perf_counter() - t0
+    cap_rps = sum(len(r.generated) for r in cal2) / cal_el / max_new
+
+    m_idle = _measure(run_probe, min(max(duration, 0.05), 0.25))
+    idle_fps = probe_flops * m_idle.calls_per_sec
+
+    window = max(2 * duration, 0.4)
+    rate = offered_mult * cap_rps
+    n_req = int(min(max(rate * window, 4), max_requests))
+    spec = LoadSpec(n_requests=n_req, rate_rps=rate,
+                    prompt_lens=prompt_lens, max_new_tokens=max_new,
+                    vocab_size=cfg.vocab_size, seed=10)
+    base_params = {"arch": cfg.name, "n_slots": n_slots,
+                   "cache_len": cache_len, "block_size": block_size,
+                   "offered_mult": offered_mult, "offered_rps": rate,
+                   "n_requests": n_req, "max_new_tokens": max_new,
+                   "prompt_lens": list(prompt_lens),
+                   "probe_flops_per_s_idle": idle_fps}
+
+    clean = {}
+    for cond in conds:
+        # the compiled engine is condition-independent (the hooks are
+        # host-side sleeps); swap the fabric on the shared engine instead
+        # of rebuilding and recompiling it per condition
+        fab = ServeFabric(cond)
+        eng.fabric = None if fab.is_clean else fab
+        reqs = make_requests(spec)      # same stream every condition
+        probe_calls = 0
+
+        def hook():
+            nonlocal probe_calls
+            run_probe()
+            probe_calls += 1
+
+        t0 = time.perf_counter()
+        eng.run(reqs, idle_hook=hook)
+        el = time.perf_counter() - t0
+        eng.fabric = None
+        toks = sum(len(r.generated) for r in reqs)
+        tps = toks / el
+        ttft = [r.ttft_s for r in reqs]
+        tok_lat = [t for r in reqs for t in r.decode_token_s]
+        ttft_p99 = _pct(ttft, 99)
+        tpot_p99 = _pct(tok_lat, 99) if tok_lat else 0.0
+        headroom_fps = probe_calls * probe_flops / el
+        if cond.is_clean:
+            clean = {"tps": tps, "ttft_p99": ttft_p99,
+                     "tpot_p99": tpot_p99, "headroom": headroom_fps}
+        level = dict(base_params, **cond.params(), condition=cond.name,
+                     wall_s=el, completed=sum(r.done for r in reqs),
+                     sustained=bool(tps >= 0.9 * rate * max_new),
+                     stalled_admit_s=fab.stalled_s["admit"],
+                     stalled_decode_s=fab.stalled_s["decode"],
+                     ttft_p50_s=_pct(ttft, 50),
+                     tpot_p50_s=_pct(tok_lat, 50) if tok_lat else 0.0,
+                     probe_calls=probe_calls)
+        records.append(Record(
+            EXPERIMENT_SERVE, cond.name, "tokens_per_sec", tps,
+            unit="tok/s", relative=tps / clean["tps"], params=dict(level)))
+        records.append(Record(
+            EXPERIMENT_SERVE, cond.name, "ttft_p99_s", ttft_p99, unit="s",
+            params=dict(level)))
+        records.append(Record(
+            EXPERIMENT_SERVE, cond.name, "ttft_p99_inflation_x",
+            ttft_p99 / clean["ttft_p99"] if clean["ttft_p99"] else 1.0,
+            unit="x",
+            relative=ttft_p99 / clean["ttft_p99"] if clean["ttft_p99"]
+            else 1.0, params=dict(level)))
+        if tok_lat:
+            records.append(Record(
+                EXPERIMENT_SERVE, cond.name, "tpot_p99_s", tpot_p99,
+                unit="s", params=dict(level)))
+            records.append(Record(
+                EXPERIMENT_SERVE, cond.name, "tpot_p99_inflation_x",
+                tpot_p99 / clean["tpot_p99"] if clean["tpot_p99"] else 1.0,
+                unit="x",
+                relative=tpot_p99 / clean["tpot_p99"] if clean["tpot_p99"]
+                else 1.0, params=dict(level)))
+        records.append(Record(
+            EXPERIMENT_SERVE, cond.name, "headroom_flops_per_s",
+            headroom_fps, unit="flop/s",
+            relative=headroom_fps / clean["headroom"]
+            if clean["headroom"] else None,
+            params=dict(level)))
+    return records

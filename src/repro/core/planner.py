@@ -19,6 +19,20 @@ Decision rules (each traceable to a paper finding, see DESIGN.md section 6):
      while the ``serve.load_sweep`` probe keeps clearing a FLOP/s floor at
      every *sustained* load level (paper: headroom measured under traffic,
      not at idle, decides what the device can absorb).
+
+Degraded-fabric arm (``fabric_records``, the ``fabric.*`` family): when a
+degraded-wire stream is present the clean-wire verdicts are re-litigated
+under it — the paper's offload win evaporates exactly when the data path
+misbehaves, so a decision that only holds on a clean wire is not a
+decision.  Rule 1 withdraws the int8 in-path transform if its degraded
+wall falls behind the uncompressed method's; rule 1b withdraws the
+pipelined schedule when degradation erases its advantage (degraded
+``overlap_efficiency`` ~ 1: the injected delay dominates both schedules'
+critical paths, so the pipeline's extra structure buys nothing); rule 5
+withdraws the serve offload when degraded p99 TTFT/TPOT inflation
+exceeds the ``fabric_p99_inflation_max`` policy knob or the degraded
+probe headroom falls under the serving floor.  The whole analysis is
+recorded on ``OffloadPlan.fabric_sensitivity``.
 """
 from __future__ import annotations
 
@@ -45,6 +59,11 @@ class OffloadPlan:
     serve_offload: Optional[bool] = None    # rule 5: extra work beside the
     #                                 serving engine — None when no
     #                                 serve.load_sweep stream was provided
+    fabric_sensitivity: Optional[dict] = None   # degraded-fabric analysis
+    #                                 (fabric_sensitivity_assessment) —
+    #                                 None when no fabric.* stream was
+    #                                 provided, i.e. the plan is clean-wire
+    #                                 only and its verdicts are unhedged
     notes: list = field(default_factory=list)
     ranking: list = field(default_factory=list)
 
@@ -90,17 +109,146 @@ def serve_offload_assessment(serve_records: Iterable[Record],
     }
 
 
+# Degraded overlap_efficiency at or above this means the pipelined
+# schedule's advantage did not survive the degradation (t_pipelined ~
+# t_serial: the injected delay owns both critical paths) — rule 1b's
+# futility cutoff, applied to the median across degraded conditions.
+OVERLAP_FUTILE_EFF = 0.95
+
+
+def _median(vals):
+    s = sorted(vals)
+    m = len(s) // 2
+    return s[m] if len(s) % 2 else 0.5 * (s[m - 1] + s[m])
+
+
+def fabric_sensitivity_assessment(fabric_records: Iterable[Record],
+                                  max_p99_inflation_x: Optional[float]
+                                  = None,
+                                  min_headroom_flops: Optional[float]
+                                  = None) -> dict:
+    """The degraded-fabric arm's input: how each clean-wire verdict held
+    up under the ``fabric.*`` stream.
+
+    From ``fabric.collectives_degraded``: per-method walls under each
+    degraded condition (rule 1 — does the int8 transform still beat the
+    uncompressed wire when the wire misbehaves?) and the degraded
+    ``overlap_efficiency`` (rule 1b — did the pipelined schedule's
+    advantage survive?).  From ``fabric.serve_tail``: worst p99 TTFT/TPOT
+    inflation vs clean and worst degraded probe headroom (rule 5).
+    Fields for an absent experiment stay None — each rule hedges only on
+    evidence it actually has.
+    """
+    from repro import runtime
+    if max_p99_inflation_x is None:
+        max_p99_inflation_x = \
+            float(runtime.policy()["fabric_p99_inflation_max"])
+    if min_headroom_flops is None:
+        min_headroom_flops = \
+            float(runtime.policy()["serve_headroom_min_gflops"]) * 1e9
+
+    eff: dict[tuple, float] = {}          # (method, condition) -> eff
+    wall: dict[tuple, float] = {}         # (method, condition) -> serial s
+    inflation: dict[tuple, float] = {}    # (metric, condition) -> x
+    headroom: dict[str, float] = {}       # condition -> flop/s
+    for r in fabric_records:
+        if r.skipped or r.error:
+            continue
+        cond = r.params.get("condition")
+        if r.experiment == "fabric.collectives_degraded":
+            method = r.params.get("method")
+            if r.metric == "overlap_efficiency":
+                eff[(method, cond)] = float(r.value)
+                wall[(method, cond)] = float(r.params.get("t_serial_s", 0))
+        elif r.experiment == "fabric.serve_tail":
+            if r.metric in ("ttft_p99_inflation_x", "tpot_p99_inflation_x"):
+                inflation[(r.metric, cond)] = float(r.value)
+            elif r.metric == "headroom_flops_per_s":
+                headroom[cond] = float(r.value)
+
+    degraded = sorted({c for _, c in eff if c != "clean"}
+                      | {c for _, c in inflation if c != "clean"}
+                      | {c for c in headroom if c != "clean"})
+
+    # rule 1b evidence: median degraded efficiency across (method, cond)
+    deg_effs = [v for (_, c), v in eff.items() if c != "clean"]
+    overlap_futile = (_median(deg_effs) >= OVERLAP_FUTILE_EFF
+                      if deg_effs else None)
+
+    # rule 1 evidence: per degraded condition, the int8 wall vs the
+    # uncompressed wall (ring if measured, else stock); 10% slack keeps a
+    # timing wobble from withdrawing a genuinely-held win
+    methods = {m for m, _ in eff}
+    plain = "ring" if "ring" in methods else (
+        "stock" if "stock" in methods else None)
+    int8s = sorted(m for m in methods if m.startswith("int8"))
+    compression_robust = None
+    losing: list = []
+    if plain and int8s:
+        checked = False
+        for c in degraded:
+            pw = wall.get((plain, c))
+            for m in int8s:
+                iw = wall.get((m, c))
+                if pw and iw:
+                    checked = True
+                    if iw > 1.1 * pw:
+                        losing.append({"method": m, "condition": c,
+                                       "wall_s": iw, "plain_wall_s": pw})
+        compression_robust = not losing if checked else None
+
+    # rule 5 evidence; the headroom clause binds only when the clean run
+    # itself cleared the floor — a probe starved even on the clean wire is
+    # a clean-wire problem (serve_offload_assessment's job), not fabric
+    # damage, and must not masquerade as it
+    deg_infl = [v for (_, c), v in inflation.items() if c != "clean"]
+    worst_inflation = max(deg_infl) if deg_infl else None
+    deg_head = [v for c, v in headroom.items() if c != "clean"]
+    min_degraded_headroom = min(deg_head) if deg_head else None
+    headroom_binds = (min_degraded_headroom is not None
+                      and headroom.get("clean", 0.0) >= min_headroom_flops)
+    serve_ok = None
+    if worst_inflation is not None or headroom_binds:
+        serve_ok = ((worst_inflation is None
+                     or worst_inflation <= max_p99_inflation_x)
+                    and (not headroom_binds
+                         or min_degraded_headroom >= min_headroom_flops))
+
+    return {
+        "conditions": degraded,
+        "overlap_efficiency": {f"{m}[{c}]": v
+                               for (m, c), v in sorted(eff.items())},
+        "overlap_futile": overlap_futile,
+        "overlap_futile_eff": OVERLAP_FUTILE_EFF,
+        "compression_robust": compression_robust,
+        "compression_losing": losing,
+        "worst_p99_inflation_x": worst_inflation,
+        "p99_inflation_max_x": max_p99_inflation_x,
+        "min_degraded_headroom_flops": min_degraded_headroom,
+        "headroom_floor_flops": min_headroom_flops,
+        "serve_offload_ok": serve_ok,
+    }
+
+
 def make_plan(terms: RooflineTerms, stressor_records: Iterable[Record],
               multi_pod: bool = True,
               bytes_per_device: Optional[float] = None,
               hbm_bytes: float = 16e9,
               grad_bytes: Optional[float] = None,
-              serve_records: Optional[Iterable[Record]] = None
+              serve_records: Optional[Iterable[Record]] = None,
+              fabric_records: Optional[Iterable[Record]] = None
               ) -> OffloadPlan:
     """Decide the offload configuration from the roofline terms plus the
     unified ``Record`` stream of the stressor suite (``stressors.suite``
-    rows, as emitted by the experiment Runner or read back from JSONL)."""
+    rows, as emitted by the experiment Runner or read back from JSONL).
+
+    ``fabric_records`` (a ``fabric.*`` stream) arms the degraded-fabric
+    rules: rules 1/1b/5 re-check their clean-wire verdicts against the
+    degraded measurements and withdraw any that did not survive (module
+    docstring; the analysis lands on ``plan.fabric_sensitivity``)."""
     plan = OffloadPlan()
+    fab = (fabric_sensitivity_assessment(fabric_records)
+           if fabric_records is not None else None)
     hr = derived_headroom(terms)
     plan.notes.append(f"bottleneck={hr['bottleneck']} "
                       f"headroom={hr['headroom_fraction']:.1%} "
@@ -137,6 +285,33 @@ def make_plan(terms: RooflineTerms, stressor_records: Iterable[Record],
                 + ("ON (pipelined schedule hides pack/quantize behind the "
                    "in-flight exchange)" if plan.dp_overlap else
                    "left serial (single chain, nothing to overlap)"))
+        # rule 1, degraded arm: the transform must win on the degraded
+        # wire too — a compression that collapses under jitter/straggler
+        # loses the offload decision outright
+        if fab is not None and fab["compression_robust"] is False:
+            worst = fab["compression_losing"][0]
+            plan.dp_method = "stock"
+            plan.dp_bucket_bytes = None
+            plan.notes.append(
+                f"rule 1 WITHDRAWN under degraded fabric: "
+                f"{worst['method']} wall {worst['wall_s'] * 1e3:.1f} ms vs "
+                f"uncompressed {worst['plain_wall_s'] * 1e3:.1f} ms under "
+                f"'{worst['condition']}' — the int8 transform wins the "
+                "clean wire but loses the degraded one; falling back to "
+                "the stock reduction")
+        # rule 1b, degraded arm: keep the pipelined schedule only if its
+        # advantage survives degradation; when degraded efficiency sits
+        # at ~1 the injected delay owns both schedules' critical paths
+        if fab is not None and fab["overlap_futile"] \
+                and plan.dp_overlap is not False:
+            plan.dp_overlap = False
+            plan.notes.append(
+                "rule 1b WITHDRAWN under degraded fabric: median degraded "
+                "overlap_efficiency >= "
+                f"{fab['overlap_futile_eff']:.2f} across "
+                f"{len(fab['conditions'])} condition(s) — the pipelined "
+                "schedule's advantage does not survive a degraded wire; "
+                "bucket chains stay serial")
     else:
         plan.notes.append("in-path compression NOT enabled "
                           "(paper sec. II-B1: don't add work to a saturated "
@@ -177,4 +352,26 @@ def make_plan(terms: RooflineTerms, stressor_records: Iterable[Record],
             + ("" if a["sustained_levels"] else
                " — no level sustained its offered load; rule 2 applies "
                "(don't add work to a saturated engine)"))
+        # rule 5, degraded arm: a verdict earned on a clean wire is
+        # withdrawn when degraded tails blow past the tolerated p99
+        # inflation or the degraded probe headroom falls under the floor
+        if plan.serve_offload and fab is not None \
+                and fab["serve_offload_ok"] is False:
+            plan.serve_offload = False
+            why = []
+            if fab["worst_p99_inflation_x"] is not None and \
+                    fab["worst_p99_inflation_x"] > fab["p99_inflation_max_x"]:
+                why.append(f"p99 inflation {fab['worst_p99_inflation_x']:.1f}x "
+                           f"> tolerated {fab['p99_inflation_max_x']:.1f}x")
+            if fab["min_degraded_headroom_flops"] is not None and \
+                    fab["min_degraded_headroom_flops"] \
+                    < fab["headroom_floor_flops"]:
+                why.append(
+                    "degraded probe headroom "
+                    f"{fab['min_degraded_headroom_flops'] / 1e9:.2f} GFLOP/s "
+                    f"< {fab['headroom_floor_flops'] / 1e9:.2f} floor")
+            plan.notes.append("rule 5 WITHDRAWN under degraded fabric: "
+                              + "; ".join(why))
+    if fab is not None:
+        plan.fabric_sensitivity = fab
     return plan

@@ -104,6 +104,26 @@ def _serve_engines(*, duration: float) -> Iterable[Record]:
     return serving.continuous_vs_static(duration=duration)
 
 
+@experiment("fabric.collectives_degraded", classes=("NETWORK", "CPU"),
+            requires_devices=2, figure="(degraded-wire offload decision)",
+            description="bucketed reduction under degraded-fabric "
+                        "conditions: overlap efficiency, degradation, "
+                        "wire goodput per condition x method x schedule")
+def _fabric_collectives(*, duration: float) -> Iterable[Record]:
+    from repro.core import fabric
+    return fabric.measure_collectives_degraded(duration=duration)
+
+
+@experiment("fabric.serve_tail", classes=("CPU", "NETWORK"),
+            figure="(tail latency under degraded fabric)",
+            description="continuous-batching load level re-served per "
+                        "fabric condition: p99 TTFT/TPOT inflation and "
+                        "probe headroom")
+def _fabric_serve_tail(*, duration: float) -> Iterable[Record]:
+    from repro.core import fabric
+    return fabric.measure_serve_tail(duration=duration)
+
+
 @experiment("roofline.table", figure="roofline table",
             description="three-term roofline of compiled dry-run cells")
 def _roofline(*, duration: float) -> Iterable[Record]:

@@ -1,0 +1,18 @@
+"""Degraded-fabric injection: loss, stragglers, and jitter as scenarios.
+
+See DESIGN.md section 12.  ``condition`` is the scenario model,
+``inject`` the collective-chain enforcement point, ``serve`` the engine
+hook.
+"""
+from repro.fabric.condition import FabricCondition, canonical_conditions
+from repro.fabric.inject import ChainInjector, iters_per_second, stall
+from repro.fabric.serve import ServeFabric
+
+__all__ = [
+    "FabricCondition",
+    "canonical_conditions",
+    "ChainInjector",
+    "ServeFabric",
+    "iters_per_second",
+    "stall",
+]

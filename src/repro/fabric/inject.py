@@ -1,0 +1,193 @@
+"""Trace-time injection of fabric degradation into collective chains.
+
+The enforcement problem: a :class:`FabricCondition` has to slow down a
+*compiled* program — the bucket chains issued by
+``parallel/collectives.py`` run inside one ``shard_map``-under-``jit``
+train step, so there is no host callback site to sleep in, and a sleep
+would stall every device equally anyway (a straggler is per-device).
+Instead we inject a **burn**: a value-dependent ``lax.while_loop`` whose
+trip count is chosen per device via ``lax.axis_index``, spliced into the
+data path of the chain it degrades.  Two details make this sound, both
+established empirically on jax 0.4.x XLA:CPU:
+
+  * the burn result must be threaded through a runtime-false select
+    (``where(v < -1, v, buf)``) — gating through an
+    ``optimization_barrier`` alone lets XLA dead-code-eliminate the loop,
+    and the select is value-neutral, so outputs stay bit-identical to the
+    clean program (the tier-1 guard test asserts this);
+  * each burn's seed folds in a probe element of the buffer it gates —
+    otherwise identical burns are CSE'd into one, and (equally important)
+    the burn inherits every dependency edge the buffer already carries,
+    so in the *serial* schedule burns line up behind the previous chain's
+    completion while in the *pipelined* schedule they only depend on
+    their own pack.  That is exactly the "straggler = per-device delay
+    inside the schedule" semantics the experiments need: the two
+    schedules react differently because the injection sits inside their
+    dependency structure, not beside it.
+
+Burn trip counts are converted from seconds via a measured calibration
+(``iters_per_second``), and per-chain *common* delays (latency, loss
+retries, jitter bursts, bandwidth stretch) are sampled once per trace by
+:class:`ChainInjector` from the condition's seeded Generator — indexed by
+chain position, so the serial and pipelined arms of one condition see the
+same delays.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.fabric.condition import FabricCondition
+
+# Nominal clean wire rate used only to turn a bucket's payload bytes into
+# a transfer time for the bandwidth-throttle term.  A model constant, not
+# a measurement: 200 MB/s is DCN-like and makes a 64 KiB bucket cost
+# ~0.3 ms at line rate, so a 4x throttle adds ~1 ms — the same order as
+# the other canonical degradations.
+REF_BYTES_PER_S = 2e8
+
+# Floor for the calibrated burn rate: if calibration measures something
+# absurdly low (a descheduled timing slice), delays would explode; clamp
+# instead of trusting it.
+_MIN_ITERS_PER_S = 1e5
+_CALIBRATED: Optional[float] = None
+
+
+def _burn(iters, v0):
+    """``iters`` trips of un-optimizable float work seeded at ``v0``."""
+    def cond(c):
+        return c[0] < iters
+
+    def body(c):
+        return c[0] + 1, c[1] * jnp.float32(1.000000119) + jnp.float32(1e-9)
+
+    return jax.lax.while_loop(cond, body, (jnp.int32(0), v0))[1]
+
+
+def iters_per_second(calibrate_s: float = 0.05,
+                     force: bool = False) -> float:
+    """Measured burn-loop rate on this host (cached per process).
+
+    Usually first called at trace time (the injector is built while the
+    wrapped step is being jitted), so the timing runs under
+    ``ensure_compile_time_eval`` — the probe executes for real, outside
+    the enclosing trace."""
+    global _CALIBRATED
+    if _CALIBRATED is not None and not force:
+        return _CALIBRATED
+    with jax.ensure_compile_time_eval():
+        _CALIBRATED = _calibrate(calibrate_s)
+    return _CALIBRATED
+
+
+def _calibrate(calibrate_s: float) -> float:
+    probe = jax.jit(lambda v: _burn(jnp.int32(500_000), v))
+    probe(jnp.float32(1.0)).block_until_ready()      # compile
+    iters = 500_000
+    t0 = time.perf_counter()
+    probe(jnp.float32(1.0)).block_until_ready()
+    dt = time.perf_counter() - t0
+    # grow the probe until it runs long enough to time reliably
+    while dt < calibrate_s and iters < 200_000_000:
+        iters *= 4
+        probe = jax.jit(lambda v, n=iters: _burn(jnp.int32(n), v))
+        probe(jnp.float32(1.0)).block_until_ready()
+        t0 = time.perf_counter()
+        probe(jnp.float32(1.0)).block_until_ready()
+        dt = time.perf_counter() - t0
+    return max(iters / max(dt, 1e-9), _MIN_ITERS_PER_S)
+
+
+def stall(buf, common_iters: int, straggler_iters: int = 0,
+          axis_name: str = "pod", straggler_device: Optional[int] = None):
+    """Delay ``buf`` by a per-device burn; value- and shape-neutral.
+
+    Every device burns ``common_iters``; the designated straggler (if
+    any) burns ``common_iters + straggler_iters``.  Returns an array
+    bit-identical to ``buf`` whose availability is gated on the burn.
+    Must run where ``axis_name`` is a manual shard_map axis.
+    """
+    if common_iters <= 0 and (straggler_iters <= 0
+                              or straggler_device is None):
+        return buf
+    me = jax.lax.axis_index(axis_name)
+    iters = jnp.int32(max(common_iters, 0))
+    if straggler_iters > 0 and straggler_device is not None:
+        iters = jnp.where(me == jnp.int32(straggler_device),
+                          iters + jnp.int32(straggler_iters), iters)
+    # Seed from the buffer itself: distinct per chain (defeats CSE) and
+    # ordered after everything buf already depends on, so the burn lives
+    # inside the schedule's dependency structure.  The probe term is
+    # scaled to vanish in float32 — v0 is numerically identical across
+    # chains, only its dependency edges differ.
+    probe = jnp.reshape(buf, (-1,))[0].astype(jnp.float32)
+    v0 = (jnp.float32(1.0) + jnp.float32(1e-8) * me.astype(jnp.float32)
+          + jnp.float32(1e-20) * probe)
+    v = _burn(iters, v0)
+    # Runtime-false select: v stays > 0, so buf passes through untouched,
+    # but XLA cannot eliminate the burn that produces v.
+    return jnp.where(v < jnp.float32(-1.0), v.astype(buf.dtype), buf)
+
+
+class ChainInjector:
+    """Per-trace sampler applying one condition to a sequence of chains.
+
+    Built once per traced program from the condition's seeded Generator:
+    chain ``i``'s common delay is sampled up front from
+    ``payload_bytes[i]`` (so the serial and pipelined arms of the same
+    condition, built from separate injectors, see identical delays), and
+    the straggler term is constant per segment.  ``perturb`` has the
+    ``run_schedule(..., perturb=)`` signature.
+    """
+
+    def __init__(self, condition: FabricCondition, axis_name: str,
+                 payload_bytes: Sequence[int],
+                 rate: Optional[float] = None):
+        self.condition = condition
+        self.axis_name = axis_name
+        if condition.is_clean:
+            self.common_delays_s = [0.0] * len(payload_bytes)
+            self.straggler_iters = 0
+            self._common_iters = [0] * len(payload_bytes)
+            return
+        rate = rate or iters_per_second()
+        rng = condition.rng()
+        self.common_delays_s = [
+            condition.segment_delay_s(rng, transfer_s=pb / REF_BYTES_PER_S)
+            for pb in payload_bytes]
+        self._common_iters = [int(d * rate) for d in self.common_delays_s]
+        self.straggler_iters = (
+            int(condition.straggler_delay_s * rate)
+            if condition.straggler_device is not None else 0)
+
+    @property
+    def injected_s(self) -> float:
+        """Total sampled common delay (straggler term excluded) — goes in
+        Record params so a run documents what it injected."""
+        return float(sum(self.common_delays_s))
+
+    def perturb(self, i: int, buf):
+        """Gate chain ``i``'s buffer on this condition's delays."""
+        ci = self._common_iters[i] if i < len(self._common_iters) else 0
+        if ci <= 0 and self.straggler_iters <= 0:
+            return buf
+        return stall(buf, ci, self.straggler_iters, self.axis_name,
+                     self.condition.straggler_device)
+
+    def perturb_tree(self, tree):
+        """Gate every leaf of a pytree on one shared burn (segment index
+        0) — the enforcement point for the unbucketed ``stock`` path,
+        where the whole gradient tree is one logical segment."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        if not leaves:
+            return tree
+        ci = self._common_iters[0] if self._common_iters else 0
+        if ci <= 0 and self.straggler_iters <= 0:
+            return tree
+        gated = [stall(leaf, ci, self.straggler_iters, self.axis_name,
+                       self.condition.straggler_device)
+                 for leaf in leaves]
+        return jax.tree_util.tree_unflatten(treedef, gated)

@@ -59,7 +59,21 @@ def main():
     ap.add_argument("--static", action="store_true",
                     help="use the static run-to-completion engine "
                          "(burst submission only)")
+    ap.add_argument("--fabric", default="clean",
+                    help="degraded-fabric condition injected into the "
+                         "engine's admission/decode path: one of the "
+                         "canonical scenarios (clean, jitter, straggler, "
+                         "lossy, throttle; repro.fabric)")
     args = ap.parse_args()
+    from repro.fabric import ServeFabric, canonical_conditions
+    canon = canonical_conditions()
+    if args.fabric not in canon:
+        ap.error(f"--fabric {args.fabric!r}: unknown condition "
+                 f"(canonical: {', '.join(sorted(canon))})")
+    if args.static and args.fabric != "clean":
+        ap.error("--fabric injects into the continuous engine's "
+                 "admission/decode path; the static engine has no such "
+                 "hooks (drop --static)")
     if args.static and args.rate:
         # the static engine has no arrival model — chunks run back to
         # back; reporting a tok/s against a never-offered rate would make
@@ -94,13 +108,22 @@ def main():
                   f"per-stage stamps)")
     else:
         from repro.serve.continuous import ContinuousEngine
+        fabric = None
+        if args.fabric != "clean":
+            fabric = ServeFabric(canon[args.fabric])
         eng = ContinuousEngine(cfg, params, n_slots=args.batch,
                                cache_len=args.cache_len,
-                               block_size=args.block_size)
+                               block_size=args.block_size, fabric=fabric)
         reqs = make_requests(spec)
         t0 = time.perf_counter()
         eng.run(reqs)
         elapsed = time.perf_counter() - t0
+        if fabric is not None:
+            print(f"[serve] fabric '{args.fabric}': "
+                  f"{canon[args.fabric].describe()} — injected "
+                  f"{fabric.stalled_s['admit'] * 1e3:.0f}ms into admission, "
+                  f"{fabric.stalled_s['decode'] * 1e3:.0f}ms into decode "
+                  "ticks")
         for i, r in enumerate(reqs):
             print(f"[serve] req {i}: prompt={len(r.prompt)} "
                   f"tokens={len(r.generated)} "

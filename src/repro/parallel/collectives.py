@@ -287,7 +287,8 @@ def _grouped_pmean(leaves, axis_name: str):
 def reduce_gradients(grads, axis_name: str, method: str = "stock",
                      errors=None, *, bucketed: Optional[bool] = None,
                      bucket_bytes: int = DEFAULT_BUCKET_BYTES,
-                     overlap: Optional[bool] = None):
+                     overlap: Optional[bool] = None,
+                     fabric=None):
     """Cross-'pod' gradient reduction with error feedback.
 
     method: stock | int8_a2a | int8_ring | int8_pairwise | ring.
@@ -314,10 +315,32 @@ def reduce_gradients(grads, axis_name: str, method: str = "stock",
     counts and wire bytes equal); only the dependency structure differs.
     Ignored on the leaf-wise path, whose chains are per-leaf and have no
     pack stage to hide.
+
+    ``fabric`` (a ``repro.fabric.FabricCondition`` or None) injects a
+    degraded-wire scenario into the chain issue: per-bucket common delays
+    (latency, loss retries, jitter, bandwidth stretch) and a per-device
+    straggler burn, spliced inside the schedule's dependency structure so
+    serial and pipelined react differently (``fabric/inject.py``).  None
+    or ``FabricCondition.clean()`` leave the traced program untouched —
+    bit-identical outputs and identical collectives (guarded in tier-1).
+    The legacy leaf-wise path (``bucketed=False``, incl. the
+    ``int8_pairwise`` default) has no bucket schedule to perturb and
+    ignores ``fabric``.
     """
     if bucketed is None:
         bucketed = method != "int8_pairwise"
+    if fabric is not None and fabric.is_clean:
+        fabric = None
     if method == "stock":
+        if fabric is not None:
+            # the unbucketed tree is one logical segment: gate every
+            # leaf's pmean on one shared burn
+            from repro.fabric.inject import ChainInjector  # fabric sits
+            #   above parallel/ in the layering; import only when used
+            nbytes = sum(g.size * g.dtype.itemsize
+                         for g in jax.tree_util.tree_leaves(grads))
+            inj = ChainInjector(fabric, axis_name, [nbytes])
+            grads = inj.perturb_tree(grads)
         return jax.tree_util.tree_map(
             lambda g: jax.lax.pmean(g, axis_name), grads), errors
 
@@ -328,7 +351,7 @@ def reduce_gradients(grads, axis_name: str, method: str = "stock",
 
     if bucketed:
         outs, ress = _reduce_bucketed(flat, eflat, axis_name, method,
-                                      bucket_bytes, overlap)
+                                      bucket_bytes, overlap, fabric)
     else:
         outs, ress = _reduce_leafwise(flat, eflat, axis_name, method)
     return (jax.tree_util.tree_unflatten(treedef, outs),
@@ -351,13 +374,18 @@ def _reduce_leafwise(flat, eflat, axis_name: str, method: str):
 
 
 def _reduce_bucketed(flat, eflat, axis_name: str, method: str,
-                     bucket_bytes: int, overlap: Optional[bool] = None):
+                     bucket_bytes: int, overlap: Optional[bool] = None,
+                     fabric=None):
     """One collective chain per fusion bucket; error feedback is packed
     into the buckets and the residual scattered back per leaf.  Chain
     issue order is a schedule (``parallel/overlap.py``): serial gates
     bucket ``i+1``'s pack on chain ``i``'s output, pipelined co-stages
     them dependency-free so the exchange can be in flight while the next
-    bucket packs."""
+    bucket packs.  A non-clean ``fabric`` becomes the schedule's
+    ``perturb``: each bucket's packed buffer is gated on that segment's
+    sampled degradation before its chain issues (the grouped pmean of
+    passthrough leaves rides clean — degradation applies to the wire's
+    bulk payload, not the tail of tiny leaves)."""
     plan = B.plan_buckets(flat, bucket_bytes=bucket_bytes,
                           min_compress_size=MIN_COMPRESS_SIZE)
     overlap = O.resolve_overlap(overlap, plan.n_buckets)
@@ -367,9 +395,17 @@ def _reduce_bucketed(flat, eflat, axis_name: str, method: str,
         # so the schedule sees one buffer per stage
         return B.pack_bucket(plan, i, flat) + B.pack_bucket(plan, i, eflat)
 
+    perturb = None
+    if fabric is not None and not fabric.is_clean:
+        from repro.fabric.inject import ChainInjector  # layered above us
+        inj = ChainInjector(fabric, axis_name,
+                            [4 * s for s in plan.bucket_sizes()])
+        perturb = inj.perturb
+
     chains = O.run_schedule(
         plan.n_buckets, pack_one,
-        lambda buf: _chain(buf, axis_name, method), overlap)
+        lambda buf: _chain(buf, axis_name, method), overlap,
+        perturb=perturb)
     red = [o for o, _ in chains]
     res = [r for _, r in chains]
     outs = B.unpack(plan, red, like=flat)

@@ -116,13 +116,22 @@ def resolve_overlap(overlap: Optional[bool], n_buckets: int) -> bool:
 
 def run_schedule(n: int, pack: Callable[[int], jax.Array],
                  exchange: Callable[[jax.Array], tuple],
-                 overlap: bool) -> list:
+                 overlap: bool,
+                 perturb: Optional[Callable[[int, jax.Array], jax.Array]]
+                 = None) -> list:
     """Issue ``n`` pack→exchange chains under the chosen schedule.
 
     ``pack(i)`` materializes bucket ``i``'s fused buffer; ``exchange(buf)``
     runs its collective chain and may return any pytree.  Returns the list
     of ``exchange`` results in bucket order — identical values under both
     schedules, only the dependency structure differs.
+
+    ``perturb(i, buf)``, when given, is applied to bucket ``i``'s packed
+    buffer immediately before its exchange — *inside* the schedule's
+    dependency structure (after the serial gate, inside the pipeline
+    stage), which is what lets a fabric degradation
+    (``fabric/inject.py``) hit the two schedules differently.  It must be
+    value-neutral; a ``None`` perturb leaves the graph untouched.
     """
     outs: list = []
     if n == 0:        # every leaf below the compress threshold: nothing
@@ -135,6 +144,8 @@ def run_schedule(n: int, pack: Callable[[int], jax.Array],
                 # chain i's dequantized output gates bucket i+1's pack:
                 # one transfer in flight at a time
                 buf = after(buf, done)
+            if perturb is not None:
+                buf = perturb(i, buf)
             out = exchange(buf)
             outs.append(out)
             done = probe(out)
@@ -150,6 +161,8 @@ def run_schedule(n: int, pack: Callable[[int], jax.Array],
             # ties chain i's completion to it — the exchange can be in
             # flight while the next bucket packs and quantizes
             buf, nxt = staged(buf, nxt)
+        if perturb is not None:
+            buf = perturb(i, buf)
         outs.append(exchange(buf))
     return outs
 

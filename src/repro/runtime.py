@@ -35,6 +35,12 @@ _DEFAULT = {
     #                             beside the engine clears this FLOP/s
     #                             floor at every sustained load level
     #                             (core/planner.serve_offload_assessment)
+    "fabric_p99_inflation_max": 3.0,  # planner rule 5, degraded-fabric arm:
+    #                             tolerated p99 TTFT/TPOT inflation (x vs
+    #                             the clean-fabric run) before the serve
+    #                             offload verdict is withdrawn
+    #                             (core/planner.fabric_sensitivity_assessment
+    #                             consuming fabric.serve_tail records)
 }
 
 _local = threading.local()

@@ -81,12 +81,21 @@ class ContinuousEngine:
                  cache_len: int = 128, block_size: int = 16,
                  kv_blocks: Optional[int] = None,
                  prefill_per_step: Optional[int] = None,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 fabric=None):
+        # fabric: an optional repro.fabric.ServeFabric — the degraded-wire
+        # enforcement point for serving.  Its stall_admit runs before each
+        # admitted prefill (TTFT inflates, queue_wait does not) and
+        # stall_decode inside each decode tick's timing window (TPOT
+        # inflates).  None or a clean condition changes nothing: token
+        # streams stay bit-identical (guarded in tier-1).
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.cache_len = cache_len
         self.clock = clock
+        self.fabric = fabric if fabric is not None \
+            and not fabric.is_clean else None
         if kv_blocks is None:
             kv_blocks = n_slots * blocks_for(cache_len, block_size)
         self.kv = KVBlockAllocator(n_blocks=kv_blocks, block_size=block_size)
@@ -148,6 +157,12 @@ class ContinuousEngine:
         if adm is None:
             return None
         slot, req = adm
+        if self.fabric is not None:
+            # admission stall lands after the scheduler stamped t_admit:
+            # the injected delay shows up as prefill time / TTFT, not as
+            # queue wait — the decomposition keeps blaming the fabric,
+            # not the admission policy
+            self.fabric.stall_admit()
         logits, slot_caches = self._prefill(
             self.params, jnp.asarray(req.prompt, jnp.int32)[None])
         first = int(jnp.argmax(logits[0, -1]))
@@ -166,6 +181,11 @@ class ContinuousEngine:
         """One synchronized decode step for every active slot."""
         active = self.scheduler.active()
         t_start = self.clock() - self._t0
+        if self.fabric is not None:
+            # inside the tick's timing window, so per-token stamps (TPOT)
+            # absorb the injected delay; the straggler term applies here —
+            # a batched step moves at the pace of its slowest device
+            self.fabric.stall_decode()
         logits, self._caches = self._decode(
             self.params, jnp.asarray(self._tok)[:, None, None],
             jnp.asarray(self._idx), self._caches)

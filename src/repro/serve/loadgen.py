@@ -30,21 +30,34 @@ class LoadSpec:
 
 
 def make_requests(spec: LoadSpec) -> list[ServeRequest]:
-    """The request stream for ``spec`` — deterministic in ``spec``."""
+    """The request stream for ``spec`` — deterministic in ``spec``.
+
+    Randomness is a pure function of ``spec.seed``: a per-spec
+    ``SeedSequence`` spawns two independent ``numpy.random.Generator``
+    streams, one for arrival gaps and one for prompt tokens.  No global
+    RNG state is touched, so the same spec yields the same stream in any
+    process, and the prompts are identical across arrival modes (the old
+    single-stream draw order made poisson prompts diverge from uniform
+    ones under the same seed).
+    """
     assert spec.n_requests > 0
     assert spec.arrivals in ("uniform", "poisson"), spec.arrivals
-    rng = np.random.RandomState(spec.seed)
+    arrival_rng, prompt_rng = (
+        np.random.default_rng(s)
+        for s in np.random.SeedSequence(spec.seed).spawn(2))
     if spec.rate_rps <= 0:
         offsets = np.zeros(spec.n_requests)
     elif spec.arrivals == "poisson":
-        gaps = rng.exponential(1.0 / spec.rate_rps, size=spec.n_requests)
+        gaps = arrival_rng.exponential(1.0 / spec.rate_rps,
+                                       size=spec.n_requests)
         offsets = np.cumsum(gaps) - gaps[0]     # first arrival at t=0
     else:
         offsets = np.arange(spec.n_requests) / spec.rate_rps
     out = []
     for i in range(spec.n_requests):
         plen = spec.prompt_lens[i % len(spec.prompt_lens)]
-        prompt = rng.randint(0, spec.vocab_size, size=plen).astype(np.int32)
+        prompt = prompt_rng.integers(
+            0, spec.vocab_size, size=plen).astype(np.int32)
         out.append(ServeRequest(prompt=prompt,
                                 max_new_tokens=spec.max_new_tokens,
                                 arrival_s=float(offsets[i])))
