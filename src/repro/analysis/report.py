@@ -67,21 +67,27 @@ def records_table(records: Iterable[Record]) -> str:
     return "\n".join(out)
 
 
+SERVE_SWEEPS = ("serve.load_sweep", "serve.sharded_sweep")
+
+
 def serve_table(records: Iterable[Record]) -> str:
-    """Latency-decomposition view of a ``serve.load_sweep`` Record stream.
+    """Latency-decomposition view of a serve-sweep Record stream
+    (``serve.load_sweep`` and/or ``serve.sharded_sweep``).
 
     One row per offered-load level: sustained throughput (and its
     fraction of burst capacity), the per-stage latency quantiles (TTFT /
     TPOT from the metrics, queue wait from params), and the probe
-    kernel's headroom FLOP/s beside the engine.
+    kernel's headroom FLOP/s beside the engine.  Sharded-sweep levels are
+    labelled with their tensor-parallel width so a combined stream keeps
+    the two data paths distinguishable.
     """
-    by_level: dict[str, dict] = {}
+    by_level: dict[tuple, dict] = {}
     for r in records:
-        if r.experiment != "serve.load_sweep" or r.skipped or r.error:
+        if r.experiment not in SERVE_SWEEPS or r.skipped or r.error:
             continue
         if not r.name.startswith("load_"):
             continue
-        d = by_level.setdefault(r.name, {"params": {}})
+        d = by_level.setdefault((r.experiment, r.name), {"params": {}})
         d[r.metric] = r
         d["params"].update(r.params)
     out = ["| level | offered rps | tok/s | of cap | queue p50 ms | "
@@ -92,22 +98,24 @@ def serve_table(records: Iterable[Record]) -> str:
         r = level.get(metric)
         return f"{r.value * 1e3:.1f}" if r and r.value is not None else "-"
 
-    def key(name):
-        p = by_level[name]["params"]
-        return p.get("offered_mult", p.get("offered_rps", 0.0))
+    def key(k):
+        p = by_level[k]["params"]
+        return (p.get("offered_mult", p.get("offered_rps", 0.0)), k[0])
 
-    for name in sorted(by_level, key=key):
-        lvl = by_level[name]
+    for exp, name in sorted(by_level, key=key):
+        lvl = by_level[(exp, name)]
         p = lvl["params"]
+        label = name if exp == "serve.load_sweep" \
+            else f"{name} tp{p.get('tp_size', '?')}"
         tps = lvl.get("tokens_per_sec")
         hr = lvl.get("headroom_flops_per_s")
         out.append(
-            f"| {name} | {p.get('offered_rps', 0.0):.1f} "
+            f"| {label} | {p.get('offered_rps', 0.0):.1f} "
             f"| {tps.value:.0f} | {tps.relative:.0%} "
             f"| {p.get('queue_wait_p50_s', 0.0) * 1e3:.1f} "
             f"| {ms(lvl, 'ttft_p50_s')}/{ms(lvl, 'ttft_p99_s')} "
             f"| {ms(lvl, 'tpot_p50_s')}/{ms(lvl, 'tpot_p99_s')} "
-            f"| {hr.value / 1e9:.2f} |" if tps and hr else f"| {name} | "
+            f"| {hr.value / 1e9:.2f} |" if tps and hr else f"| {label} | "
             "incomplete level (missing tokens_per_sec/headroom rows) "
             "| | | | | | |")
     return "\n".join(out)

@@ -16,9 +16,12 @@ Decision rules (each traceable to a paper finding, see DESIGN.md section 6):
      stressor shows the device beats the reference platform (paper: offload
      only operations the device is relatively good at).
   5. serve-side offload: extra work rides beside the serving engine only
-     while the ``serve.load_sweep`` probe keeps clearing a FLOP/s floor at
-     every *sustained* load level (paper: headroom measured under traffic,
-     not at idle, decides what the device can absorb).
+     while the serve-sweep probe keeps clearing a FLOP/s floor at every
+     *sustained* load level (paper: headroom measured under traffic, not
+     at idle, decides what the device can absorb).  A
+     ``serve.sharded_sweep`` stream — headroom beside tensor-parallel
+     decode, where the probe contends with live collectives — outranks
+     the single-device ``serve.load_sweep`` when both are present.
 
 Degraded-fabric arm (``fabric_records``, the ``fabric.*`` family): when a
 degraded-wire stream is present the clean-wire verdicts are re-litigated
@@ -68,37 +71,53 @@ class OffloadPlan:
     ranking: list = field(default_factory=list)
 
 
+# Rule 5 reads these sweeps in preference order: the sharded sweep —
+# where the probe contends with live decode collectives, not just decode
+# compute — is the trustworthy measurement when present; the
+# single-device sweep is the fallback.
+SERVE_SWEEP_EXPERIMENTS = ("serve.sharded_sweep", "serve.load_sweep")
+
+
 def serve_offload_assessment(serve_records: Iterable[Record],
                              min_headroom_flops: Optional[float] = None
                              ) -> dict:
     """Rule 5's input: probe headroom per offered-load level.
 
-    Reads the ``serve.load_sweep`` rows (``headroom_flops_per_s`` per
-    ``load_*`` level — the probe kernel's achieved FLOP/s beside the
-    engine) and decides whether serve-side offloaded work is profitable:
-    the *worst* headroom across levels that sustained their offered load
-    must clear ``min_headroom_flops`` (default: the
-    ``serve_headroom_min_gflops`` runtime policy knob).  Levels past
-    saturation (offered load not sustained) are excluded — at those the
-    engine itself is already failing its traffic, and the paper's rule 2
-    applies instead: don't add work to a saturated processor.
+    Reads the serve-sweep rows (``headroom_flops_per_s`` per ``load_*``
+    level — the probe kernel's achieved FLOP/s beside the engine) and
+    decides whether serve-side offloaded work is profitable: the *worst*
+    headroom across levels that sustained their offered load must clear
+    ``min_headroom_flops`` (default: the ``serve_headroom_min_gflops``
+    runtime policy knob).  Levels past saturation (offered load not
+    sustained) are excluded — at those the engine itself is already
+    failing its traffic, and the paper's rule 2 applies instead: don't
+    add work to a saturated processor.
+
+    When the stream carries both ``serve.sharded_sweep`` and
+    ``serve.load_sweep`` rows the sharded sweep wins (the offload
+    verdict is only trustworthy where decode collectives and the probe
+    genuinely contend); ``source`` records which stream decided.
     """
     if min_headroom_flops is None:
         from repro import runtime
         min_headroom_flops = \
             float(runtime.policy()["serve_headroom_min_gflops"]) * 1e9
-    levels: dict[str, float] = {}
-    sustained: dict[str, bool] = {}
+    by_exp: dict[str, dict[str, float]] = {}
+    sustained: dict[tuple[str, str], bool] = {}
     for r in serve_records:
         if r.skipped or r.error or r.metric != "headroom_flops_per_s":
             continue
-        if r.experiment != "serve.load_sweep":
+        if r.experiment not in SERVE_SWEEP_EXPERIMENTS:
             continue        # a combined run stream carries other families
         if not r.name.startswith("load_"):
             continue        # the probe_idle reference row is not a level
-        levels[r.name] = float(r.value)
-        sustained[r.name] = bool(r.params.get("sustained", True))
-    usable = {n: v for n, v in levels.items() if sustained[n]}
+        by_exp.setdefault(r.experiment, {})[r.name] = float(r.value)
+        sustained[(r.experiment, r.name)] = \
+            bool(r.params.get("sustained", True))
+    source = next((e for e in SERVE_SWEEP_EXPERIMENTS if by_exp.get(e)),
+                  None)
+    levels = by_exp.get(source, {})
+    usable = {n: v for n, v in levels.items() if sustained[(source, n)]}
     worst = min(usable.values()) if usable else 0.0
     return {
         "profitable": bool(usable) and worst >= min_headroom_flops,
@@ -106,6 +125,7 @@ def serve_offload_assessment(serve_records: Iterable[Record],
         "threshold_flops": min_headroom_flops,
         "levels": levels,
         "sustained_levels": sorted(usable),
+        "source": source,
     }
 
 
@@ -348,7 +368,8 @@ def make_plan(terms: RooflineTerms, stressor_records: Iterable[Record],
             f"sustained-load probe headroom "
             f"{a['worst_headroom_flops'] / 1e9:.2f} GFLOP/s vs "
             f"{a['threshold_flops'] / 1e9:.2f} floor over "
-            f"{len(a['sustained_levels'])} sustained level(s)"
+            f"{len(a['sustained_levels'])} sustained level(s) "
+            f"[{a['source'] or 'no sweep rows'}]"
             + ("" if a["sustained_levels"] else
                " — no level sustained its offered load; rule 2 applies "
                "(don't add work to a saturated engine)"))

@@ -13,12 +13,22 @@ latency decomposition (queue wait, TTFT, TPOT — the stamps
 actionable, the same way the DPU studies decompose per-stage datapath
 latency rather than reporting a single number.
 
+``sharded_sweep`` is the same sweep with the engine tensor-parallel over
+the visible devices (``ContinuousEngine(tp_size=N)`` — decode routed
+through the mesh-aware cells in ``serve/step.py``): now the probe kernel
+contends with live decode *collectives*, not just the decode compute, so
+planner rule 5's serve-offload verdict is re-derived where the
+contention is real.  The stream additionally pins the decode step's
+per-kind collective counts from compiled HLO (``collectives_per_step``)
+— a resharding that silently creeps into the hot loop changes that row
+before it changes any latency quantile.
+
 ``continuous_vs_static`` is the engine-level comparison: the same mixed
 workload through the static run-to-completion engine (the seed's serving
 path) and the slot-admission engine, reported as sustained token
 throughput.
 
-Both emit the unified ``Record`` stream and register through
+All emit the unified ``Record`` stream and register through
 ``@experiment`` in ``repro.experiments.defs`` (family ``serve``).
 """
 from __future__ import annotations
@@ -38,6 +48,7 @@ from repro.serve.continuous import ContinuousEngine
 from repro.serve.loadgen import LoadSpec, make_requests
 
 EXPERIMENT_LOAD = "serve.load_sweep"
+EXPERIMENT_SHARDED = "serve.sharded_sweep"
 EXPERIMENT_ENGINE = "serve.continuous_vs_static"
 
 # offered-load multiples of measured capacity: two under, at, and past
@@ -75,47 +86,34 @@ def _pct(vals: Sequence[float], q: float) -> float:
     return float(np.percentile(np.asarray(vals, np.float64), q))
 
 
-def load_sweep(duration: float = 0.3,
-               offered: Sequence[float] = OFFERED_MULTS,
-               arch: str = "olmo-1b", n_slots: int = 4,
-               cache_len: int = 64, block_size: int = 8,
-               prompt_lens: tuple = (8, 16), max_new: int = 8,
-               max_requests: int = 32) -> list[Record]:
-    """Offered-load sweep over the continuous-batching engine.
-
-    Per load level (a multiple of the measured burst capacity) the stream
-    carries: sustained token throughput (relative = fraction of
-    capacity), p50/p99 TTFT and TPOT, queue-wait quantiles in params, and
-    the probe kernel's achieved FLOP/s (relative = fraction of its idle
-    rate) — compute headroom while the engine sustains that traffic.
-    ``duration`` scales the measurement window per level.
+def _offered_sweep(eng, cfg, experiment: str, base_params: dict,
+                   duration: float, offered: Sequence[float],
+                   prompt_lens: tuple, max_new: int,
+                   max_requests: int) -> list[Record]:
+    """The shared sweep body behind ``load_sweep`` and ``sharded_sweep``:
+    probe-idle reference, burst capacity calibration, then one run per
+    offered-load level with the probe mounted on the engine's idle hook.
     """
-    cfg, _, eng = _smoke_engine(arch, n_slots, cache_len, block_size)
     run_probe, probe_flops = _make_probe()
     records: list[Record] = []
-    base_params = {"arch": cfg.name, "n_slots": n_slots,
-                   "cache_len": cache_len, "block_size": block_size,
-                   "kv_blocks": eng.kv.n_blocks,
-                   "prompt_lens": list(prompt_lens),
-                   "max_new_tokens": max_new}
 
     # probe alone: the idle-FLOP/s reference every level is normalized to
     m_idle = measure(run_probe, min(max(duration, 0.05), 0.25))
     idle_fps = probe_flops * m_idle.calls_per_sec
     records.append(Record(
-        EXPERIMENT_LOAD, "probe_idle", "headroom_flops_per_s", idle_fps,
+        experiment, "probe_idle", "headroom_flops_per_s", idle_fps,
         unit="flop/s", relative=1.0,
         params=dict(base_params, probe_dim=PROBE_DIM,
                     probe_iters=PROBE_ITERS, probe_flops=probe_flops)))
 
     # burst calibration: saturated capacity; also warms every compile
     # (prefill per prompt length, decode, slot insert) out of the sweep
-    cal = make_requests(LoadSpec(n_requests=2 * n_slots, rate_rps=0.0,
+    cal = make_requests(LoadSpec(n_requests=2 * eng.n_slots, rate_rps=0.0,
                                  prompt_lens=prompt_lens,
                                  max_new_tokens=max_new,
                                  vocab_size=cfg.vocab_size))
     eng.generate(cal)                       # compile pass, untimed
-    cal2 = make_requests(LoadSpec(n_requests=2 * n_slots, rate_rps=0.0,
+    cal2 = make_requests(LoadSpec(n_requests=2 * eng.n_slots, rate_rps=0.0,
                                   prompt_lens=prompt_lens,
                                   max_new_tokens=max_new,
                                   vocab_size=cfg.vocab_size, seed=1))
@@ -125,7 +123,7 @@ def load_sweep(duration: float = 0.3,
     cap_tps = sum(len(r.generated) for r in cal2) / cal_el
     cap_rps = cap_tps / max_new
     records.append(Record(
-        EXPERIMENT_LOAD, "capacity", "tokens_per_sec", cap_tps,
+        experiment, "capacity", "tokens_per_sec", cap_tps,
         unit="tok/s", relative=1.0,
         params=dict(base_params, wall_s=cal_el,
                     requests_per_sec=cap_rps, mode="burst")))
@@ -165,27 +163,103 @@ def load_sweep(duration: float = 0.3,
                      queue_wait_p50_s=_pct(qwait, 50),
                      queue_wait_p99_s=_pct(qwait, 99),
                      prefill_p50_s=_pct(prefill, 50))
-        records.append(Record(EXPERIMENT_LOAD, name, "tokens_per_sec", tps,
+        records.append(Record(experiment, name, "tokens_per_sec", tps,
                               unit="tok/s", relative=tps / cap_tps,
                               params=dict(level)))
-        records.append(Record(EXPERIMENT_LOAD, name, "ttft_p50_s",
+        records.append(Record(experiment, name, "ttft_p50_s",
                               _pct(ttft, 50), unit="s", params=dict(level)))
-        records.append(Record(EXPERIMENT_LOAD, name, "ttft_p99_s",
+        records.append(Record(experiment, name, "ttft_p99_s",
                               _pct(ttft, 99), unit="s", params=dict(level)))
         if tok_lat:     # max_new=1 has no decode stage, hence no TPOT rows
-            records.append(Record(EXPERIMENT_LOAD, name, "tpot_p50_s",
+            records.append(Record(experiment, name, "tpot_p50_s",
                                   _pct(tok_lat, 50), unit="s",
                                   params=dict(level)))
-            records.append(Record(EXPERIMENT_LOAD, name, "tpot_p99_s",
+            records.append(Record(experiment, name, "tpot_p99_s",
                                   _pct(tok_lat, 99), unit="s",
                                   params=dict(level)))
         headroom_fps = probe_calls * probe_flops / el
         records.append(Record(
-            EXPERIMENT_LOAD, name, "headroom_flops_per_s", headroom_fps,
+            experiment, name, "headroom_flops_per_s", headroom_fps,
             unit="flop/s", relative=headroom_fps / idle_fps if idle_fps
             else None,
             params=dict(level, probe_calls=probe_calls,
                         probe_flops=probe_flops)))
+    return records
+
+
+def load_sweep(duration: float = 0.3,
+               offered: Sequence[float] = OFFERED_MULTS,
+               arch: str = "olmo-1b", n_slots: int = 4,
+               cache_len: int = 64, block_size: int = 8,
+               prompt_lens: tuple = (8, 16), max_new: int = 8,
+               max_requests: int = 32) -> list[Record]:
+    """Offered-load sweep over the continuous-batching engine.
+
+    Per load level (a multiple of the measured burst capacity) the stream
+    carries: sustained token throughput (relative = fraction of
+    capacity), p50/p99 TTFT and TPOT, queue-wait quantiles in params, and
+    the probe kernel's achieved FLOP/s (relative = fraction of its idle
+    rate) — compute headroom while the engine sustains that traffic.
+    ``duration`` scales the measurement window per level.
+    """
+    cfg, _, eng = _smoke_engine(arch, n_slots, cache_len, block_size)
+    base_params = {"arch": cfg.name, "n_slots": n_slots,
+                   "cache_len": cache_len, "block_size": block_size,
+                   "kv_blocks": eng.kv.n_blocks,
+                   "prompt_lens": list(prompt_lens),
+                   "max_new_tokens": max_new}
+    return _offered_sweep(eng, cfg, EXPERIMENT_LOAD, base_params, duration,
+                          offered, prompt_lens, max_new, max_requests)
+
+
+def sharded_sweep(duration: float = 0.3,
+                  offered: Sequence[float] = OFFERED_MULTS,
+                  arch: str = "olmo-1b", tp_size: Optional[int] = None,
+                  n_slots: int = 4, cache_len: int = 64,
+                  block_size: int = 8, prompt_lens: tuple = (8, 16),
+                  max_new: int = 8, max_requests: int = 24) -> list[Record]:
+    """``load_sweep`` with the engine tensor-parallel over the mesh.
+
+    The engine's decode runs through the sharded cells in
+    ``serve/step.py`` (params and KV sequence split over a 'model' axis
+    of ``tp_size`` devices, default: all visible up to 4), so the probe
+    kernel on the idle hook now contends with the decode step's
+    *collectives* — the paper's cores-vs-wire question at serving scale,
+    and the stream planner rule 5 prefers when present.  One extra row
+    pins the compiled decode step's trip-count-weighted collective count
+    (``collectives_per_step``, per-kind breakdown in params): a
+    resharding silently creeping into the hot loop moves this
+    deterministic row before any latency quantile drifts.
+    """
+    n_dev = len(jax.devices())
+    if tp_size is None:
+        tp_size = min(4, n_dev)
+    if tp_size < 2:
+        raise RuntimeError(
+            f"serve.sharded_sweep needs a tensor-parallel axis "
+            f"(tp_size={tp_size}, {n_dev} visible device(s)); fabricate "
+            f"devices with --devices N")
+    cfg = smoke(all_archs()[arch])
+    params = registry.init_params(cfg, jax.random.key(0))
+    eng = ContinuousEngine(cfg, params, n_slots=n_slots,
+                           cache_len=cache_len, block_size=block_size,
+                           tp_size=tp_size)
+    base_params = {"arch": cfg.name, "n_slots": n_slots,
+                   "cache_len": cache_len, "block_size": block_size,
+                   "kv_blocks": eng.kv.n_blocks,
+                   "prompt_lens": list(prompt_lens),
+                   "max_new_tokens": max_new,
+                   "tp_size": tp_size, "n_devices": n_dev,
+                   "mesh_axes": {"data": 1, "model": tp_size}}
+    counts = eng.cells.decode_collective_counts(eng.params)
+    records = [Record(
+        EXPERIMENT_SHARDED, "decode_step", "collectives_per_step",
+        float(sum(counts.values())), unit="ops",
+        params=dict(base_params,
+                    per_kind={k: float(v) for k, v in sorted(counts.items())}))]
+    records += _offered_sweep(eng, cfg, EXPERIMENT_SHARDED, base_params,
+                              duration, offered, prompt_lens, max_new,
+                              max_requests)
     return records
 
 

@@ -95,6 +95,17 @@ def _serve_load_sweep(*, duration: float) -> Iterable[Record]:
     return serving.load_sweep(duration=duration)
 
 
+@experiment("serve.sharded_sweep", classes=("CPU", "NETWORK"),
+            requires_devices=2, figure="Fig. 2/4 (serving, sharded)",
+            description="offered-load sweep with tensor-parallel decode "
+                        "over the mesh: p50/p99 TTFT/TPOT, pinned decode "
+                        "collective counts, probe headroom beside the "
+                        "sharded traffic")
+def _serve_sharded_sweep(*, duration: float) -> Iterable[Record]:
+    from repro.core import serving
+    return serving.sharded_sweep(duration=duration)
+
+
 @experiment("serve.continuous_vs_static", classes=("CPU",),
             figure="(engine comparison)",
             description="mixed-length workload: slot-admission continuous "

@@ -10,8 +10,10 @@ question: a composable description of how the wire misbehaves —
   * ``bandwidth_factor``   throttling: a segment's transfer time scales by
                            ``1/bandwidth_factor`` (1.0 = line rate),
   * ``loss_rate`` +        loss-with-retry: each segment independently
-    ``retry_latency_s``    loses with probability ``loss_rate`` and pays
-                           ``retry_latency_s`` per (geometric) retry,
+    ``retry_latency_s``    loses with probability ``loss_rate``; every
+                           (geometric) retry re-issues the segment
+                           wholesale — ``retry_latency_s`` plus a full
+                           re-pay of the (throttled) transfer time,
   * ``straggler_device`` + one designated slow device: every segment costs
     ``straggler_delay_s``  it this much extra (the schedule decides
                            whether that serializes, ``fabric/inject.py``),
@@ -122,17 +124,23 @@ class FabricCondition:
         bandwidth throttle stretches it to ``transfer_s /
         bandwidth_factor``, so the added cost is the difference.  Loss
         retries are geometric (each attempt independently lost with
-        ``loss_rate``); jitter is an all-or-nothing burst.  The straggler
-        term is *not* included — it is per-device, applied by the
-        enforcement point (``fabric/inject.py`` / ``fabric/serve.py``)."""
+        ``loss_rate``) and each retry *re-issues the segment*: it pays
+        ``retry_latency_s`` plus the full throttled transfer again — a
+        lost chain segment is recomputed and resent, not merely
+        acknowledged late.  Jitter is an all-or-nothing burst.  The
+        straggler term is *not* included — it is per-device, applied by
+        the enforcement point (``fabric/inject.py`` /
+        ``fabric/serve.py``)."""
         d = self.latency_s
         if self.bandwidth_factor < 1.0 and transfer_s > 0.0:
             d += transfer_s * (1.0 / self.bandwidth_factor - 1.0)
-        if self.loss_rate > 0.0 and self.retry_latency_s > 0.0:
+        if self.loss_rate > 0.0 and (self.retry_latency_s > 0.0
+                                     or transfer_s > 0.0):
             # geometric(p) counts attempts until first success: retries
             # are the failed attempts before it
             retries = int(rng.geometric(1.0 - self.loss_rate)) - 1
-            d += retries * self.retry_latency_s
+            d += retries * (self.retry_latency_s
+                            + transfer_s / self.bandwidth_factor)
         if self.jitter_s > 0.0 and self.jitter_prob > 0.0:
             if rng.random() < self.jitter_prob:
                 d += self.jitter_s

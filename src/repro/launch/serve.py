@@ -13,16 +13,18 @@ stamps there; it reports tokens and wall time only).
 ``--rate 0`` (the default) submits everything as one burst; a positive
 rate drives evenly spaced arrivals at that many requests per second —
 the load-generator behind the ``serve.load_sweep`` experiment.
+
+``--tp-size N`` makes the continuous engine tensor-parallel: decode and
+prefill run through the mesh-aware cells in ``serve/step.py`` over N
+devices (``--devices`` fabricates host devices for it, which is why jax
+is imported only after argument parsing — the XLA flag must be set
+before the backend initializes).
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
-
-import jax
-
-from repro.configs import all_archs, smoke
-from repro.models import registry
 
 
 def _fmt_ms(v) -> str:
@@ -64,8 +66,22 @@ def main():
                          "engine's admission/decode path: one of the "
                          "canonical scenarios (clean, jitter, straggler, "
                          "lossy, throttle; repro.fabric)")
+    ap.add_argument("--tp-size", type=int, default=1,
+                    help="tensor-parallel decode over this many devices "
+                         "(continuous engine; params + per-slot KV "
+                         "sequence sharded over a 'model' axis)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="fabricate N host devices (XLA flag; must be set "
+                         "before jax initializes, hence a CLI flag)")
     args = ap.parse_args()
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}")
+    import jax
+    from repro.configs import all_archs, smoke
     from repro.fabric import ServeFabric, canonical_conditions
+    from repro.models import registry
     canon = canonical_conditions()
     if args.fabric not in canon:
         ap.error(f"--fabric {args.fabric!r}: unknown condition "
@@ -80,6 +96,15 @@ def main():
         # the two engines' numbers incomparable
         ap.error("--static serves one burst; it cannot pace arrivals "
                  "(drop --rate or use the continuous engine)")
+    if args.tp_size < 1:
+        ap.error("--tp-size must be >= 1")
+    if args.static and args.tp_size > 1:
+        ap.error("--tp-size shards the continuous engine's decode cells; "
+                 "the static engine has no sharded path (drop --static)")
+    if args.tp_size > len(jax.devices()):
+        ap.error(f"--tp-size {args.tp_size} exceeds the "
+                 f"{len(jax.devices())} visible device(s) "
+                 f"(fabricate more with --devices N)")
 
     cfg = smoke(all_archs()[args.arch])
     params = registry.init_params(cfg, jax.random.key(0))
@@ -113,7 +138,8 @@ def main():
             fabric = ServeFabric(canon[args.fabric])
         eng = ContinuousEngine(cfg, params, n_slots=args.batch,
                                cache_len=args.cache_len,
-                               block_size=args.block_size, fabric=fabric)
+                               block_size=args.block_size, fabric=fabric,
+                               tp_size=args.tp_size)
         reqs = make_requests(spec)
         t0 = time.perf_counter()
         eng.run(reqs)
@@ -132,7 +158,9 @@ def main():
                   f"prefill={_fmt_ms(r.prefill_s)} "
                   f"tpot={_fmt_ms(r.tpot_s)}")
     toks = sum(len(r.generated) for r in reqs)
-    mode = "static" if args.static else "continuous"
+    mode = "static" if args.static else (
+        f"continuous tp={args.tp_size}" if args.tp_size > 1 else
+        "continuous")
     print(f"[serve] {mode}: {len(reqs)} requests, {toks} tokens in "
           f"{elapsed:.2f}s -> {toks / elapsed:.1f} tok/s "
           f"(offered {args.rate or 'burst'} req/s)")

@@ -31,6 +31,18 @@ Mechanics (DESIGN.md section 11):
   achieved FLOP/s as the compute headroom left beside the traffic, the
   paper's question transposed to serving.
 
+* **Tensor parallelism.**  ``tp_size=N`` (or an explicit ``mesh=``)
+  routes all three cells — batch-1 prefill, vmapped slot decode, slot
+  insertion — through the mesh-aware builders in ``serve/step.py``:
+  params sharded by the decode rules, the per-slot KV sequence split
+  over the 'model' axis, per-slot tokens/positions replicated scalars.
+  The scheduler, KV allocator and the whole host loop are untouched —
+  they account in slots and logical token positions, blind to device
+  count — and greedy token streams stay bit-identical to the
+  single-device engine (the differential tier in
+  ``tests/test_serve_sharded.py`` holds them equal and pins the decode
+  step's per-kind collective counts).
+
 Inactive slots decode garbage (fixed shapes keep one compiled step); the
 results are masked on the host and every admission overwrites the whole
 slot cache, so garbage never leaks into a live request.
@@ -47,9 +59,10 @@ import numpy as np
 
 from repro import runtime
 from repro.configs.base import ArchConfig
-from repro.models import registry
+from repro.parallel import compat
 from repro.serve.kv import KVBlockAllocator, blocks_for
 from repro.serve.scheduler import ServeRequest, SlotScheduler
+from repro.serve.step import make_continuous_cells
 
 
 @dataclass(frozen=True)
@@ -82,23 +95,44 @@ class ContinuousEngine:
                  kv_blocks: Optional[int] = None,
                  prefill_per_step: Optional[int] = None,
                  clock: Callable[[], float] = time.perf_counter,
-                 fabric=None):
+                 fabric=None, mesh=None, tp_size: int = 1):
         # fabric: an optional repro.fabric.ServeFabric — the degraded-wire
         # enforcement point for serving.  Its stall_admit runs before each
         # admitted prefill (TTFT inflates, queue_wait does not) and
         # stall_decode inside each decode tick's timing window (TPOT
         # inflates).  None or a clean condition changes nothing: token
-        # streams stay bit-identical (guarded in tier-1).
+        # streams stay bit-identical (guarded in tier-1).  Both hooks are
+        # host-side, so they compose unchanged with a sharded engine — a
+        # straggler drags the whole tensor-parallel step.
+        #
+        # mesh / tp_size: tensor-parallel decode.  ``tp_size=N`` builds a
+        # (1, N) ("data", "model") mesh over the visible devices; an
+        # explicit ``mesh=`` wins when given.
         self.cfg = cfg
-        self.params = params
         self.n_slots = n_slots
         self.cache_len = cache_len
         self.clock = clock
         self.fabric = fabric if fabric is not None \
             and not fabric.is_clean else None
+        if mesh is None and tp_size > 1:
+            n_dev = len(jax.devices())
+            if tp_size > n_dev:
+                raise ValueError(
+                    f"tp_size={tp_size} exceeds the {n_dev} visible "
+                    f"device(s); fabricate more with "
+                    f"XLA_FLAGS=--xla_force_host_platform_device_count=N")
+            mesh = compat.make_mesh((1, tp_size), ("data", "model"))
+        self.cells = make_continuous_cells(cfg, n_slots, cache_len,
+                                           mesh=mesh)
+        self.tp_size = self.cells.tp_size
+        self.params = self.cells.put_params(params)
         if kv_blocks is None:
             kv_blocks = n_slots * blocks_for(cache_len, block_size)
-        self.kv = KVBlockAllocator(n_blocks=kv_blocks, block_size=block_size)
+        # n_shards frames the allocator's placement() view only — every
+        # admission decision stays in logical positions, device-blind
+        self.kv = KVBlockAllocator(n_blocks=kv_blocks,
+                                   block_size=block_size,
+                                   n_shards=self.tp_size)
         self.scheduler = SlotScheduler(n_slots, self.kv)
         if prefill_per_step is None:
             prefill_per_step = int(runtime.policy()["serve_prefill_per_step"])
@@ -106,29 +140,10 @@ class ContinuousEngine:
         self.step_log: list[StepEvent] = []
         self.idle_iters = 0
 
-        def _prefill(params, tokens):
-            return registry.prefill(cfg, params, {"tokens": tokens},
-                                    cache_len=cache_len)
-
-        def _slot_decode(params, tokens, index, caches):
-            return registry.decode_step(
-                cfg, params, {"tokens": tokens, "index": index}, caches)
-
-        def _insert(caches, slot_caches, slot):
-            return jax.tree_util.tree_map(
-                lambda c, p: jax.lax.dynamic_update_slice_in_dim(
-                    c, p[None].astype(c.dtype), slot, axis=0),
-                caches, slot_caches)
-
-        self._prefill = jax.jit(_prefill)
-        self._decode = jax.jit(jax.vmap(_slot_decode,
-                                        in_axes=(None, 0, 0, 0)),
-                               donate_argnums=3)
-        self._insert = jax.jit(_insert, donate_argnums=0)
-
-        base = registry.init_decode_caches(cfg, 1, cache_len)
-        self._caches = jax.tree_util.tree_map(
-            lambda a: jnp.stack([a] * n_slots), base)
+        self._prefill = self.cells.prefill
+        self._decode = self.cells.decode
+        self._insert = self.cells.insert
+        self._caches = self.cells.init_slot_caches()
         self._tok = np.zeros((n_slots,), np.int32)
         self._idx = np.zeros((n_slots,), np.int32)
 

@@ -12,6 +12,16 @@ a slot decision — a free slot with an exhausted pool stays empty, which
 is exactly the HBM-pressure behavior the ``serve.load_sweep``
 characterization wants observable.
 
+The allocator is **device-count-blind**: every decision (``can_reserve``,
+``reserve``, ``release``) is made in *logical token positions*, never in
+bytes-per-device — whether the per-slot cache lives on one device or is
+sequence-split over a tensor-parallel 'model' axis (``serve/step.py``),
+the same workload produces the same block tables in the same order.
+``placement`` is the one shard-aware view: it maps an owned table onto
+the per-shard position ranges the sharded cache materializes, and the
+property tests hold it to an exact partition for shard counts 1/2/4
+while the decisions stay identical.
+
 Invariants (property-tested in ``tests/test_serve_scheduler.py``):
 every block is free or owned by exactly one request; a request's table
 never shrinks while live; ``release`` returns every owned block, so after
@@ -20,6 +30,7 @@ a full sweep the pool is back to ``n_blocks`` free.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Optional
 
 
 def blocks_for(n_tokens: int, block_size: int) -> int:
@@ -30,14 +41,24 @@ def blocks_for(n_tokens: int, block_size: int) -> int:
 
 @dataclass
 class KVBlockAllocator:
-    """Fixed-size block pool with per-request block tables."""
+    """Fixed-size block pool with per-request block tables.
+
+    ``n_shards`` records how many devices the fronted cache's sequence
+    axis is split over (the engine passes its tensor-parallel width).  It
+    is the default frame for ``placement`` and *nothing else*: no
+    capacity or lifecycle decision may read it — the property tests
+    drive identical workloads at shard counts 1/2/4 and hold every
+    decision equal.
+    """
     n_blocks: int
     block_size: int
+    n_shards: int = 1
     _free: list = field(default_factory=list)       # LIFO free stack
     _tables: dict = field(default_factory=dict)     # rid -> [block ids]
 
     def __post_init__(self):
         assert self.n_blocks > 0 and self.block_size > 0
+        assert self.n_shards >= 1
         self._free = list(range(self.n_blocks - 1, -1, -1))
 
     # -- capacity ----------------------------------------------------------
@@ -80,6 +101,42 @@ class KVBlockAllocator:
         table = self._tables.pop(rid)
         self._free.extend(reversed(table))
         return len(table)
+
+    # -- shard-aware view ----------------------------------------------------
+
+    def placement(self, rid: int, cache_len: int,
+                  n_shards: Optional[int] = None
+                  ) -> list[tuple[int, int, int, int]]:
+        """Map ``rid``'s table onto per-shard slices of the sharded cache.
+
+        The i-th table entry covers the request's logical positions
+        ``[i*block_size, (i+1)*block_size)``; when the per-slot cache
+        sequence is split contiguously over ``n_shards`` devices (the
+        tensor-parallel layout ``serve/step.py`` materializes), shard
+        ``d`` holds positions ``[d*cache_len/n, (d+1)*cache_len/n)``.
+        Returns ``(block_index, shard, local_start, length)`` covering
+        each block's positions exactly once — purely a *view*: allocation
+        never consults the shard count, which is the blindness the
+        property tests pin.
+        """
+        if n_shards is None:
+            n_shards = self.n_shards
+        assert n_shards >= 1 and cache_len % n_shards == 0, \
+            (cache_len, n_shards)
+        per = cache_len // n_shards
+        out = []
+        for i in range(len(self._tables[rid])):
+            # the last block may round past the physical cache; only
+            # positions that exist in the sharded buffer are placed
+            lo = i * self.block_size
+            hi = min((i + 1) * self.block_size, cache_len)
+            if lo >= hi:
+                continue
+            for d in range(lo // per, (hi - 1) // per + 1):
+                s, e = max(lo, d * per), min(hi, (d + 1) * per)
+                if s < e:
+                    out.append((i, d, s - d * per, e - s))
+        return out
 
     # -- invariants --------------------------------------------------------
 

@@ -16,6 +16,14 @@ conservative reservation — no preemption needed).  Admission order is
 FIFO; the engine interleaves one admission's prefill with the in-flight
 decode batch each step, which is the continuous-batching property the
 mixed-arrival test observes.
+
+Both scheduler and allocator are host-side and account in *slots* and
+*logical token positions* — they never see a device, so the same
+workload drives identical decisions whether the engine's cache lives on
+one device or is tensor-parallel over eight (``serve/step.py``).
+``admit_log`` records every (rid, slot) admission in order; the property
+tests replay one workload against allocators framed at shard counts
+1/2/4 and hold the logs equal.
 """
 from __future__ import annotations
 
@@ -98,6 +106,7 @@ class SlotScheduler:
         self.kv = kv
         self.pending: deque[ServeRequest] = deque()
         self.slots: list[Optional[ServeRequest]] = [None] * n_slots
+        self.admit_log: list[tuple[int, int]] = []   # (rid, slot), in order
         self._next_rid = 0
 
     # -- queue -------------------------------------------------------------
@@ -141,6 +150,7 @@ class SlotScheduler:
         self.kv.reserve(req.rid, lifetime)
         assert self.slots[slot] is None, "slot double-assigned"
         self.slots[slot] = req
+        self.admit_log.append((req.rid, slot))
         req.t_admit = now
         return slot, req
 

@@ -3,8 +3,20 @@
 decode cells: the KV cache is sequence-split over 'model' (flash-decode
 style) for normal batched decode, and over every mesh axis for the
 batch=1 long_500k cell (see parallel/sharding.decode_rules).
+
+``make_continuous_cells`` packages the three cells the continuous-
+batching engine drives (batch-1 prefill, vmapped slot decode, slot
+insertion) as one :class:`ServeCells`, either single-device (the
+engine's original plain-jit cells) or tensor-parallel over a
+``("data", "model")`` mesh with explicit in/out shardings, so the
+compiled steps are reshard-free at the call boundary and a silent
+resharding shows up as a collective-count mismatch (guarded in
+``tests/test_serve_sharded.py``).
 """
 from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -98,3 +110,161 @@ def jit_prefill_step(cfg: ArchConfig, shape: ShapeConfig, mesh):
             ctx.mesh, sharding.safe_spec(v.shape, logical, ctx))
     jitted = jax.jit(step, in_shardings=(pspec, bspec))
     return jitted, ctx, params_shape
+
+
+# ---------------------------------------------------------------------------
+# continuous-engine cells: slot-stacked decode over the mesh
+# ---------------------------------------------------------------------------
+
+def slot_cache_shardings(slot_cache_shape, ctx: sharding.ShardingCtx):
+    """Shardings for the continuous engine's *slot-stacked* decode caches.
+
+    The engine stacks batch-1 caches along a leading slot axis, so every
+    leaf carries two extra leading dims over the per-kind logical rules
+    (slot, then the model-family group dim) — both replicated; the cache
+    sequence stays split over 'model' exactly as in ``cache_shardings``.
+    """
+    def spec(path, leaf):
+        key = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        for keys, logical in _CACHE_RULES:
+            if key in keys and len(leaf.shape) == len(logical) + 2:
+                return sharding.safe_spec(leaf.shape, (None, None) + logical,
+                                          ctx)
+        return P()
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: compat.named_sharding(ctx.mesh, spec(path, leaf)),
+        slot_cache_shape)
+
+
+@dataclass
+class ServeCells:
+    """The continuous engine's three compiled cells + their placements.
+
+    ``mesh=None`` is the single-device build: ``put_params`` /
+    ``init_slot_caches`` are identity/host placements and the cells are
+    the engine's original plain ``jax.jit`` closures.  With a mesh, the
+    cells carry explicit in/out shardings (params by the decode rules,
+    slot caches via ``slot_cache_shardings``, tokens/positions replicated
+    scalars) and the placement helpers ``device_put`` accordingly.
+    """
+    cfg: ArchConfig
+    n_slots: int
+    cache_len: int
+    prefill: Callable        # (params, tokens[1,S]) -> (logits, base caches)
+    decode: Callable         # (params, tok[slot,1,1], idx[slot], slot caches)
+    insert: Callable         # (slot caches, base caches, slot) -> slot caches
+    mesh: Optional[object] = None
+    ctx: Optional[sharding.ShardingCtx] = None
+    param_sharding: Optional[object] = None     # pytree of NamedSharding
+    slot_sharding: Optional[object] = None      # slot-stacked cache pytree
+    _decode_text: Optional[str] = field(default=None, repr=False)
+
+    @property
+    def tp_size(self) -> int:
+        return 1 if self.mesh is None else int(dict(self.mesh.shape)
+                                               .get("model", 1))
+
+    @property
+    def n_devices(self) -> int:
+        return 1 if self.mesh is None else self.mesh.size
+
+    def put_params(self, params):
+        if self.param_sharding is None:
+            return params
+        return jax.device_put(params, self.param_sharding)
+
+    def init_slot_caches(self):
+        base = registry.init_decode_caches(self.cfg, 1, self.cache_len)
+        stacked = jax.tree_util.tree_map(
+            lambda a: jnp.stack([a] * self.n_slots), base)
+        if self.slot_sharding is None:
+            return stacked
+        return jax.device_put(stacked, self.slot_sharding)
+
+    # -- HLO inspection (tests + the sharded-sweep experiment) -------------
+
+    def decode_hlo_text(self, params) -> str:
+        """Compiled HLO of the slot-decode cell (cached; abstract args, so
+        this never touches — or donates — live buffers)."""
+        if self._decode_text is None:
+            p = jax.tree_util.tree_map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+            tok = jax.ShapeDtypeStruct((self.n_slots, 1, 1), jnp.int32)
+            idx = jax.ShapeDtypeStruct((self.n_slots,), jnp.int32)
+            caches = jax.tree_util.tree_map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                self.init_slot_caches())
+            self._decode_text = self.decode.lower(
+                p, tok, idx, caches).compile().as_text()
+        return self._decode_text
+
+    def decode_collective_counts(self, params) -> dict:
+        """Trip-count-weighted per-kind collective counts of the compiled
+        slot-decode step — the silent-resharding guard: an implicit
+        resharding XLA inserts at the call boundary changes these."""
+        from repro.analysis import hlo
+        ops = hlo.parse_collectives(self.decode_hlo_text(params),
+                                    self.n_devices)
+        return dict(hlo.collective_counts(ops))
+
+
+def make_continuous_cells(cfg: ArchConfig, n_slots: int, cache_len: int,
+                          mesh=None) -> ServeCells:
+    """Build the continuous engine's cells, single-device or sharded.
+
+    The sharded build uses the *batched* decode rules
+    (``decode_rules(long_context=False)`` — heads/mlp/vocab and the KV
+    sequence over 'model'), never the batch=1 long-context cell that
+    ``_ctx_for`` would pick: the engine's slot axis is the batch.
+    """
+    def _prefill(params, tokens):
+        return registry.prefill(cfg, params, {"tokens": tokens},
+                                cache_len=cache_len)
+
+    def _slot_decode(params, tokens, index, caches):
+        return registry.decode_step(
+            cfg, params, {"tokens": tokens, "index": index}, caches)
+
+    def _insert(caches, slot_caches, slot):
+        return jax.tree_util.tree_map(
+            lambda c, p: jax.lax.dynamic_update_slice_in_dim(
+                c, p[None].astype(c.dtype), slot, axis=0),
+            caches, slot_caches)
+
+    if mesh is None:
+        return ServeCells(
+            cfg=cfg, n_slots=n_slots, cache_len=cache_len,
+            prefill=jax.jit(_prefill),
+            decode=jax.jit(jax.vmap(_slot_decode, in_axes=(None, 0, 0, 0)),
+                           donate_argnums=3),
+            insert=jax.jit(_insert, donate_argnums=0))
+
+    ctx = sharding.ShardingCtx(
+        mesh, sharding.decode_rules("pod" in mesh.axis_names, False))
+    pspec = sharding.param_shardings(registry.abstract_params(cfg), ctx)
+    base_shape = registry.abstract_decode_caches(cfg, 1, cache_len)
+    bspec = cache_shardings(base_shape, ctx)
+    slot_shape = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct((n_slots,) + a.shape, a.dtype),
+        base_shape)
+    sspec = slot_cache_shardings(slot_shape, ctx)
+    rep = compat.named_sharding(mesh, P())
+
+    def pre(params, tokens):
+        with sharding.use_ctx(ctx):
+            return _prefill(params, tokens)
+
+    def dec(params, tokens, index, caches):
+        with sharding.use_ctx(ctx):
+            return jax.vmap(_slot_decode, in_axes=(None, 0, 0, 0))(
+                params, tokens, index, caches)
+
+    return ServeCells(
+        cfg=cfg, n_slots=n_slots, cache_len=cache_len,
+        prefill=jax.jit(pre, in_shardings=(pspec, rep),
+                        out_shardings=(rep, bspec)),
+        decode=jax.jit(dec, in_shardings=(pspec, rep, rep, sspec),
+                       out_shardings=(rep, sspec), donate_argnums=3),
+        insert=jax.jit(_insert, in_shardings=(sspec, bspec, rep),
+                       out_shardings=sspec, donate_argnums=0),
+        mesh=mesh, ctx=ctx, param_sharding=pspec, slot_sharding=sspec)

@@ -92,6 +92,55 @@ def test_condition_sampling_deterministic_and_additive():
     assert [other.segment_delay_s(r3) for _ in range(16)] != seq1
 
 
+def test_lossy_retry_charges_segment_reissue():
+    """A lost segment is re-issued wholesale: each geometric retry pays
+    ``retry_latency_s`` PLUS the segment's (throttled) transfer time —
+    the old model charged only the fixed wire penalty, undercharging a
+    transport that must recompute and resend the chain segment.  The
+    canonical lossy scenario is seeded, so the degradation multiple is a
+    deterministic pin, replayed draw for draw."""
+    cond = canonical_conditions()["lossy"]
+    transfer = 2e-3
+    rng, replay = cond.rng(), cond.rng()
+    total = wire_only = total_retries = 0.0
+    for _ in range(64):
+        d = cond.segment_delay_s(rng, transfer_s=transfer)
+        retries = int(replay.geometric(1.0 - cond.loss_rate)) - 1
+        total_retries += retries
+        # exact per-segment accounting: latency + per-retry re-issue
+        assert d == pytest.approx(
+            cond.latency_s + retries * (cond.retry_latency_s + transfer))
+        total += d
+        wire_only += cond.latency_s + retries * cond.retry_latency_s
+    # the seeded scenario fires a fixed number of retries...
+    assert total_retries == 22
+    # ...and the re-issue term is exactly one extra transfer per retry:
+    # for these magnitudes the lossy bill grows ~1.29x over wire-time-only
+    assert total == pytest.approx(wire_only + total_retries * transfer)
+    assert total / wire_only == pytest.approx(1.289, abs=5e-3)
+    # under a throttle, the re-issued transfer is re-paid at the degraded
+    # rate (transfer / bandwidth_factor), on top of the throttle's own
+    # added cost on the first attempt
+    thr = FabricCondition(name="lt", loss_rate=cond.loss_rate,
+                          retry_latency_s=cond.retry_latency_s,
+                          latency_s=cond.latency_s,
+                          bandwidth_factor=0.5, seed=cond.seed)
+    rng, replay = thr.rng(), thr.rng()
+    for _ in range(16):
+        d = thr.segment_delay_s(rng, transfer_s=transfer)
+        retries = int(replay.geometric(1.0 - thr.loss_rate)) - 1
+        assert d == pytest.approx(
+            thr.latency_s + transfer * (1 / 0.5 - 1.0)
+            + retries * (thr.retry_latency_s + transfer / 0.5))
+    # with no transfer time the model reduces to the old wire-only charge
+    # (the serve hooks call it this way — their behavior is unchanged)
+    rng, replay = cond.rng(), cond.rng()
+    for _ in range(16):
+        retries = int(replay.geometric(1.0 - cond.loss_rate)) - 1
+        assert cond.segment_delay_s(rng) == pytest.approx(
+            cond.latency_s + retries * cond.retry_latency_s)
+
+
 def test_canonical_conditions_shape():
     canon = canonical_conditions()
     assert set(canon) == {"clean", "jitter", "straggler", "lossy",

@@ -66,12 +66,16 @@ req_strategy = st.tuples(st.integers(1, 12),     # prompt length
                          st.integers(0, 20))     # arrival step
 
 
-def _drive(n_slots, n_blocks, block_size, specs):
+def _drive(n_slots, n_blocks, block_size, specs, n_shards=1):
     """The continuous engine's scheduling loop, with decode simulated:
     each iteration ingests arrivals, admits at most one request (its
     'prefill' yields the first token), then advances every active slot
-    one token.  Returns the admissible requests after the full sweep."""
-    kv = KVBlockAllocator(n_blocks=n_blocks, block_size=block_size)
+    one token.  ``n_shards`` frames the allocator the way a
+    tensor-parallel engine would — it must not change a single decision.
+    Returns the admissible requests after the full sweep, plus the block
+    table captured at each admission."""
+    kv = KVBlockAllocator(n_blocks=n_blocks, block_size=block_size,
+                          n_shards=n_shards)
     sched = SlotScheduler(n_slots, kv)
     reqs = [ServeRequest(prompt=np.zeros(p, np.int32), max_new_tokens=m,
                          arrival_s=float(a)) for p, m, a in specs
@@ -79,7 +83,7 @@ def _drive(n_slots, n_blocks, block_size, specs):
             # the engine rejects them at submit (ValueError)
             if blocks_for(p + m, block_size) <= n_blocks]
     arrivals = sorted(reqs, key=lambda r: r.arrival_s)
-    seen, t, iters = 0, 0.0, 0
+    seen, t, iters, tables = 0, 0.0, 0, []
     while seen < len(arrivals) or sched.has_work:
         iters += 1
         assert iters < 10_000, "scheduler stopped making progress"
@@ -90,6 +94,7 @@ def _drive(n_slots, n_blocks, block_size, specs):
         adm = sched.admit(t)
         if adm is not None:
             slot, req = adm
+            tables.append((req.rid, kv.table(req.rid)))
             req.generated.append(0)            # prefill's first token
             req.t_first_token = t
             if len(req.generated) >= req.max_new_tokens:
@@ -101,14 +106,14 @@ def _drive(n_slots, n_blocks, block_size, specs):
                 sched.complete(slot, t)
         sched.check()                          # no double assignment, pool
         #                                        consistent, every step
-    return reqs, kv, sched
+    return reqs, kv, sched, tables
 
 
 @given(st.integers(1, 4), st.integers(2, 24), st.integers(1, 4),
        st.lists(req_strategy, min_size=1, max_size=12))
 def test_sweep_completes_exactly_and_recycles(n_slots, n_blocks, block_size,
                                               specs):
-    reqs, kv, sched = _drive(n_slots, n_blocks, block_size, specs)
+    reqs, kv, sched, _ = _drive(n_slots, n_blocks, block_size, specs)
     # every admitted request completed with exactly max_new_tokens tokens
     for r in reqs:
         assert r.done and r.state == "done"
@@ -122,9 +127,67 @@ def test_sweep_completes_exactly_and_recycles(n_slots, n_blocks, block_size,
 @given(st.integers(1, 4), st.integers(2, 24), st.integers(1, 4),
        st.lists(req_strategy, min_size=1, max_size=12))
 def test_lifecycle_stamps_monotone(n_slots, n_blocks, block_size, specs):
-    reqs, _, _ = _drive(n_slots, n_blocks, block_size, specs)
+    reqs, _, _, _ = _drive(n_slots, n_blocks, block_size, specs)
     for r in reqs:
         assert r.t_enqueue <= r.t_admit <= r.t_first_token <= r.t_done
         assert r.queue_wait_s >= 0 and r.ttft_s >= 0 and r.total_s >= 0
         # decode tokens exist iff the request decoded past its first token
         assert len(r.decode_token_s) == r.max_new_tokens - 1
+
+
+# ---------------------------------------------------------------------------
+# device-count blindness: the tensor-parallel frame changes nothing
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 4), st.integers(2, 24), st.integers(1, 4),
+       st.lists(req_strategy, min_size=1, max_size=12))
+def test_decisions_blind_to_shard_count(n_slots, n_blocks, block_size, specs):
+    """Identical workloads at shard counts 1/2/4 produce identical
+    admission orders, slot assignments, block tables and lifecycle
+    stamps — the allocator refactor kept every decision in logical token
+    positions, so the tensor-parallel width is invisible to scheduling."""
+    runs = {n: _drive(n_slots, n_blocks, block_size, specs, n_shards=n)
+            for n in (1, 2, 4)}
+    base_reqs, _, base_sched, base_tables = runs[1]
+    for n in (2, 4):
+        reqs, kv, sched, tables = runs[n]
+        assert kv.n_shards == n
+        assert sched.admit_log == base_sched.admit_log
+        assert tables == base_tables
+        stamps = [(r.rid, r.t_enqueue, r.t_admit, r.t_first_token, r.t_done,
+                   tuple(r.generated)) for r in reqs]
+        base = [(r.rid, r.t_enqueue, r.t_admit, r.t_first_token, r.t_done,
+                 tuple(r.generated)) for r in base_reqs]
+        assert stamps == base
+
+
+@given(st.integers(2, 24), st.integers(1, 4), st.integers(1, 40),
+       st.sampled_from([1, 2, 4]))
+def test_placement_partitions_each_block(n_blocks, block_size, n_tokens,
+                                         n_shards):
+    """``placement`` is an exact partition: each table entry's logical
+    positions are covered once, split at shard boundaries with correct
+    per-shard local offsets — and clamped to the physical cache."""
+    if blocks_for(n_tokens, block_size) > n_blocks:
+        n_tokens = n_blocks * block_size
+    # a cache long enough for the whole pool and divisible by the widest
+    # shard count under test — the engine guarantees divisibility because
+    # the sharded cells require it
+    cache_len = n_blocks * block_size * 4
+    kv = KVBlockAllocator(n_blocks=n_blocks, block_size=block_size,
+                          n_shards=n_shards)
+    kv.reserve(0, n_tokens)
+    per = cache_len // n_shards
+    covered = {i: [] for i in range(len(kv.table(0)))}
+    for i, d, local, length in kv.placement(0, cache_len):
+        assert 0 <= d < n_shards and length > 0
+        assert 0 <= local and local + length <= per
+        g = d * per + local                     # back to logical positions
+        covered[i].append((g, g + length))
+    for i, segs in covered.items():
+        segs.sort()
+        lo, hi = i * block_size, min((i + 1) * block_size, cache_len)
+        assert segs[0][0] == lo and segs[-1][1] == hi
+        assert all(a[1] == b[0] for a, b in zip(segs, segs[1:])), segs
+    # the default frame and an explicit override agree
+    assert kv.placement(0, cache_len) == kv.placement(0, cache_len, n_shards)
