@@ -67,19 +67,22 @@ def records_table(records: Iterable[Record]) -> str:
     return "\n".join(out)
 
 
-SERVE_SWEEPS = ("serve.load_sweep", "serve.sharded_sweep")
+SERVE_SWEEPS = ("serve.load_sweep", "serve.sharded_sweep",
+                "serve.paged_attention")
 
 
 def serve_table(records: Iterable[Record]) -> str:
     """Latency-decomposition view of a serve-sweep Record stream
-    (``serve.load_sweep`` and/or ``serve.sharded_sweep``).
+    (``serve.load_sweep``, ``serve.sharded_sweep`` and/or the engine half
+    of ``serve.paged_attention``).
 
     One row per offered-load level: sustained throughput (and its
     fraction of burst capacity), the per-stage latency quantiles (TTFT /
     TPOT from the metrics, queue wait from params), and the probe
     kernel's headroom FLOP/s beside the engine.  Sharded-sweep levels are
-    labelled with their tensor-parallel width so a combined stream keeps
-    the two data paths distinguishable.
+    labelled with their tensor-parallel width, paged-engine levels with
+    ``paged`` — a combined stream keeps the three data paths
+    distinguishable.
     """
     by_level: dict[tuple, dict] = {}
     for r in records:
@@ -105,8 +108,12 @@ def serve_table(records: Iterable[Record]) -> str:
     for exp, name in sorted(by_level, key=key):
         lvl = by_level[(exp, name)]
         p = lvl["params"]
-        label = name if exp == "serve.load_sweep" \
-            else f"{name} tp{p.get('tp_size', '?')}"
+        if exp == "serve.sharded_sweep":
+            label = f"{name} tp{p.get('tp_size', '?')}"
+        elif exp == "serve.paged_attention":
+            label = f"{name} paged"
+        else:
+            label = name
         tps = lvl.get("tokens_per_sec")
         hr = lvl.get("headroom_flops_per_s")
         out.append(

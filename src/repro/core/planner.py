@@ -73,9 +73,12 @@ class OffloadPlan:
 
 # Rule 5 reads these sweeps in preference order: the sharded sweep —
 # where the probe contends with live decode collectives, not just decode
-# compute — is the trustworthy measurement when present; the
-# single-device sweep is the fallback.
-SERVE_SWEEP_EXPERIMENTS = ("serve.sharded_sweep", "serve.load_sweep")
+# compute — is the trustworthy measurement when present; the paged sweep
+# is next (probe beside paged-pool decode traffic — the KV-residency mode
+# an offloaded deployment would actually run); the single-device dense
+# sweep is the fallback.
+SERVE_SWEEP_EXPERIMENTS = ("serve.sharded_sweep", "serve.paged_attention",
+                           "serve.load_sweep")
 
 
 def serve_offload_assessment(serve_records: Iterable[Record],

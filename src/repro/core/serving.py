@@ -50,6 +50,16 @@ from repro.serve.loadgen import LoadSpec, make_requests
 EXPERIMENT_LOAD = "serve.load_sweep"
 EXPERIMENT_SHARDED = "serve.sharded_sweep"
 EXPERIMENT_ENGINE = "serve.continuous_vs_static"
+EXPERIMENT_PAGED = "serve.paged_attention"
+
+# page-size x buffer-depth grid for the paged-attention microbench.  The
+# depth knob's win is page-granularity amortization (pages in flight per
+# walk step), so the sweep tops out at the engine's smoke block size —
+# at this container's smoke dims the per-step dispatch it amortizes
+# dominates exactly in that range (larger pages already move enough per
+# step that extra width costs more than the saved steps).
+PAGED_PAGE_SIZES = (2, 4, 8)
+PAGED_DEPTHS = (1, 2, 4)
 
 # offered-load multiples of measured capacity: two under, at, and past
 # saturation — the knee the paper's delay sweep looks for, in request rate
@@ -258,6 +268,105 @@ def sharded_sweep(duration: float = 0.3,
         params=dict(base_params,
                     per_kind={k: float(v) for k, v in sorted(counts.items())}))]
     records += _offered_sweep(eng, cfg, EXPERIMENT_SHARDED, base_params,
+                              duration, offered, prompt_lens, max_new,
+                              max_requests)
+    return records
+
+
+def paged_sweep(duration: float = 0.3, arch: str = "olmo-1b",
+                page_sizes: Sequence[int] = PAGED_PAGE_SIZES,
+                buffer_depths: Sequence[int] = PAGED_DEPTHS,
+                n_seqs: int = 8, kv_tokens: int = 512,
+                offered: Sequence[float] = (0.5, 1.0),
+                n_slots: int = 4, cache_len: int = 64, block_size: int = 8,
+                prompt_lens: tuple = (8, 16), max_new: int = 8,
+                max_requests: int = 16) -> list[Record]:
+    """Paged-attention characterization: page-size x buffer-depth grid,
+    a bytes-moved model per page size, and probe headroom beside a
+    *paged* engine.
+
+    The microbench drives ``kernels/ops.paged_attention`` directly — one
+    decode token for each of ``n_seqs`` ragged sequences against a page
+    pool, every (page size, depth) combination measured as attention
+    tokens/s (relative = speedup over depth 1 at the same page size, so
+    the double-buffering knob's win is read straight off the stream).
+    ``page{ps}_bytes`` rows carry the deterministic traffic model —
+    page-granular bytes touched per token vs the valid-token ideal, the
+    wire-bytes idiom applied to KV reads (relative = utilization; the
+    page-size knob trades this against table length).  The engine half
+    re-runs the offered-load sweep with ``paged=True`` so planner rule
+    5's ``load_*`` headroom rows exist beside *paged* decode traffic.
+    """
+    from repro.kernels import ops as kops
+
+    cfg = smoke(all_archs()[arch])
+    H, Kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    impl = "pallas" if kops.use_paged_kernel() else "xla"
+    itemsize = jnp.dtype(jnp.float32).itemsize
+    rng = np.random.default_rng(0)
+    # ragged lengths: longest sequence uses the full budget, the rest
+    # step down so page counts differ across the batch
+    lens_np = np.clip(kv_tokens - np.arange(n_seqs) * 37, 1, kv_tokens)
+    lengths = jnp.asarray(lens_np, jnp.int32)
+    q = jnp.asarray(rng.standard_normal((n_seqs, H, hd)), jnp.float32)
+    records: list[Record] = []
+    base = {"arch": cfg.name, "n_seqs": n_seqs, "kv_tokens": kv_tokens,
+            "impl": impl, "backend": jax.default_backend(),
+            "n_heads": H, "n_kv_heads": Kv, "head_dim": hd}
+
+    for ps in page_sizes:
+        max_pages = kv_tokens // ps
+        n_pages = n_seqs * max_pages + 1          # + trash page
+        pool = jnp.asarray(
+            rng.standard_normal((n_pages, ps, 2 * Kv, hd)), jnp.float32)
+        perm = rng.permutation(n_pages - 1)
+        tables = jnp.asarray(
+            perm[:n_seqs * max_pages].reshape(n_seqs, max_pages), jnp.int32)
+
+        # deterministic traffic model: the kernel walks ceil(len/ps)
+        # pages per sequence, so page-granular bytes touched per decode
+        # token vs the valid-token ideal is pure arithmetic — the
+        # wire-bytes idiom for KV reads
+        row_bytes = 2 * Kv * hd * itemsize
+        touched = int(np.sum(-(-lens_np // ps)) * ps) * row_bytes
+        ideal = int(np.sum(lens_np)) * row_bytes
+        records.append(Record(
+            EXPERIMENT_PAGED, f"page{ps}_bytes", "kv_bytes_per_token",
+            touched / n_seqs, unit="bytes", relative=ideal / touched,
+            params=dict(base, page_size=ps, max_pages=max_pages,
+                        ideal_bytes_per_token=ideal / n_seqs)))
+
+        tps_d1 = None
+        for d in buffer_depths:
+            def fn(d=d):
+                return jax.block_until_ready(kops.paged_attention(
+                    q, pool, tables, lengths, buffer_depth=d))
+            fn()                                   # compile, untimed
+            m = measure(fn, duration)
+            tps = n_seqs * m.calls_per_sec
+            if tps_d1 is None:
+                tps_d1 = tps
+            records.append(Record(
+                EXPERIMENT_PAGED, f"page{ps}_depth{d}",
+                "attn_tokens_per_sec", tps, unit="tok/s",
+                relative=tps / tps_d1,
+                params=dict(base, page_size=ps, depth=d,
+                            max_pages=max_pages,
+                            attn_s_per_token=1.0 / tps if tps else None)))
+
+    # probe headroom beside *paged* decode traffic: the offered-load
+    # sweep re-run with the paged engine, feeding planner rule 5
+    params = registry.init_params(cfg, jax.random.key(0))
+    eng = ContinuousEngine(cfg, params, n_slots=n_slots,
+                           cache_len=cache_len, block_size=block_size,
+                           paged=True)
+    eng_params = {"arch": cfg.name, "n_slots": n_slots,
+                  "cache_len": cache_len, "block_size": block_size,
+                  "kv_blocks": eng.kv.n_blocks, "paged": True,
+                  "page_buffer_depth": eng.cells.buffer_depth,
+                  "prompt_lens": list(prompt_lens),
+                  "max_new_tokens": max_new}
+    records += _offered_sweep(eng, cfg, EXPERIMENT_PAGED, eng_params,
                               duration, offered, prompt_lens, max_new,
                               max_requests)
     return records

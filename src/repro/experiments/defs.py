@@ -106,6 +106,17 @@ def _serve_sharded_sweep(*, duration: float) -> Iterable[Record]:
     return serving.sharded_sweep(duration=duration)
 
 
+@experiment("serve.paged_attention", classes=("CPU", "MEMORY"),
+            figure="(paged-KV decode characterization)",
+            description="page-size x buffer-depth sweep of the ragged "
+                        "paged-attention walk: attention tokens/s per "
+                        "combination, page-granular KV bytes vs ideal, "
+                        "probe headroom beside a paged engine")
+def _serve_paged(*, duration: float) -> Iterable[Record]:
+    from repro.core import serving
+    return serving.paged_sweep(duration=duration)
+
+
 @experiment("serve.continuous_vs_static", classes=("CPU",),
             figure="(engine comparison)",
             description="mixed-length workload: slot-admission continuous "

@@ -10,6 +10,7 @@ the smaller Kv-head tensor without materializing the repeat.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +23,7 @@ NEG_INF = -1e30
 
 
 def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-                sm_scale, causal, window, block_q, block_k, n_k):
+                sm_scale, causal, window, block_q, block_k, n_k, seq_len):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -39,7 +40,11 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
     qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
     kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
-    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    # kpos bound: a ragged tail pads S up to the block grid, and the pad
+    # keys must never score — causal masking happens to hide them from
+    # real rows, but non-causal (or the padded rows' own normalization)
+    # would read them
+    mask = kpos < seq_len
     if causal:
         mask &= kpos <= qpos
     if window:
@@ -79,17 +84,24 @@ def flash_attention_fwd(q, k, v, *, causal=True, window=0, sm_scale=None,
     sm_scale = sm_scale if sm_scale is not None else hd ** -0.5
     block_q = min(block_q, S)
     block_k = min(block_k, S)
-    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
-    n_q, n_k = S // block_q, S // block_k
+    # ragged tail: pad S up to the block grid (zeros) and mask the pad
+    # keys inside the kernel (kpos < S); padded query rows compute
+    # garbage that is sliced off below
+    lcm = block_q * block_k // math.gcd(block_q, block_k)
+    Sp = -(-S // lcm) * lcm
+    if Sp != S:
+        pad = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    n_q, n_k = Sp // block_q, Sp // block_k
 
-    qt = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
-    kt = k.transpose(0, 2, 1, 3).reshape(B * Kv, S, hd)
-    vt = v.transpose(0, 2, 1, 3).reshape(B * Kv, S, hd)
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, Sp, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * Kv, Sp, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * Kv, Sp, hd)
 
     grid = (B * H, n_q, n_k)
     kern = functools.partial(
         _fwd_kernel, sm_scale=sm_scale, causal=causal, window=window,
-        block_q=block_q, block_k=block_k, n_k=n_k)
+        block_q=block_q, block_k=block_k, n_k=n_k, seq_len=S)
     out = pl.pallas_call(
         kern,
         grid=grid,
@@ -102,7 +114,7 @@ def flash_attention_fwd(q, k, v, *, causal=True, window=0, sm_scale=None,
         ],
         out_specs=pl.BlockSpec((None, block_q, hd),
                                lambda bh, qi, ki: (bh, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp, hd), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((block_q, hd), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),
@@ -110,4 +122,4 @@ def flash_attention_fwd(q, k, v, *, causal=True, window=0, sm_scale=None,
         ],
         interpret=interpret,
     )(qt, kt, vt)
-    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    return out.reshape(B, H, Sp, hd).transpose(0, 2, 1, 3)[:, :S]

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro import runtime
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
 from repro.kernels import quant as _q
 from repro.kernels import ref as _ref
 from repro.kernels import rwkv6_scan as _rs
@@ -69,6 +70,43 @@ def _rwkv6_scan(r, k, v, w, u, s0, *, chunk, interpret):
 
 def rwkv6_scan(r, k, v, w, u, s0=None, *, chunk=64):
     return _rwkv6_scan(r, k, v, w, u, s0, chunk=chunk, interpret=_interp())
+
+
+@partial(jax.jit, static_argnames=("buffer_depth", "use_kernel",
+                                   "interpret"))
+def _paged_attention(q, pool, tables, lengths, *, buffer_depth, use_kernel,
+                     interpret):
+    if use_kernel:
+        return _pa.paged_attention_fwd(q, pool, tables, lengths,
+                                       buffer_depth=buffer_depth,
+                                       interpret=interpret)
+    return _pa.paged_attention_xla(q, pool, tables, lengths,
+                                   buffer_depth=buffer_depth)
+
+
+def use_paged_kernel() -> bool:
+    """Whether paged attention takes the Pallas kernel under the current
+    policy: ``pallas`` forces it, ``xla`` forbids it, ``auto`` keys on the
+    backend the way ``quant.resolve_interpret`` does — the kernel's manual
+    DMA pipeline only pays where Mosaic compiles it, so backends that
+    would run the interpreter route through the XLA twin instead (same
+    math and page walk; ``kernels/paged_attention.py``)."""
+    impl = runtime.policy()["paged_attention_impl"]
+    if impl == "auto":
+        return not _q.resolve_interpret(None)
+    return impl == "pallas"
+
+
+def paged_attention(q, pool, tables, lengths, *, buffer_depth=None):
+    """Policy-dispatched ragged paged-attention decode (see
+    ``kernels/paged_attention.py`` for shapes).  ``buffer_depth=None``
+    reads the ``paged_buffer_depth`` policy knob."""
+    if buffer_depth is None:
+        buffer_depth = int(runtime.policy()["paged_buffer_depth"])
+    return _paged_attention(q, pool, tables, lengths,
+                            buffer_depth=buffer_depth,
+                            use_kernel=use_paged_kernel(),
+                            interpret=_interp())
 
 
 # NOTE: unlike the attention/rwkv wrappers these are deliberately NOT

@@ -1,0 +1,183 @@
+"""Ragged paged-attention decode Pallas kernel with DMA double-buffering.
+
+One query token per sequence attends over that sequence's KV pages in a
+physical block-paged pool (``serve/kv.py`` + ``serve/paged.py``): pool
+layout ``(n_pages, page_size, 2*Kv, hd)`` with K/V *head-interleaved*
+along the fused head axis (``[k0, v0, k1, v1, ...]``, the tpu_commons
+fused-KV layout — one DMA per page moves both halves).  The kernel grid
+is one program per sequence; each program walks its block table (a
+scalar-prefetch array, so page ids are known before the DMAs they index)
+and keeps ``buffer_depth`` page copies in flight: pages ``j+1 ..
+j+depth-1`` stream HBM->VMEM while page ``j``'s scores fold into the
+running online-softmax state — the paper's headroom-during-transfer
+question at kernel granularity (how much attention compute hides behind
+page fetches?).  The tail page is ragged: positions past ``lengths[s]``
+are masked, so sequences need not fill their last page, and table rows
+are padded with a trash page that is never read unmasked.
+
+``interpret=None`` resolves per backend exactly like ``kernels/quant.py``
+(compiled Mosaic on TPU/GPU, interpreter on CPU, where the DMA semantics
+are emulated and the kernel is validated against ``kernels/ref.py``).
+
+``paged_attention_xla`` is the pure-XLA twin the serve path dispatches to
+on backends without a compiled Pallas lowering: the same page walk as a
+``lax.scan``, with ``buffer_depth`` becoming the number of pages gathered
+per step — the same knob, the same schedule; amortized gather/dispatch
+overhead instead of DMA/compute overlap, which is why the
+``serve.paged_attention`` sweep can observe the depth axis on every
+backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.quant import resolve_interpret
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(tables, lengths, q_ref, pool, o_ref, buf, sem, *,
+                   page_size, depth, max_pages, n_kv, rep, sm_scale):
+    s = pl.program_id(0)
+    length = lengths[s]
+    n_pages = jax.lax.div(length + page_size - 1, page_size)
+
+    def dma(j, slot):
+        return pltpu.make_async_copy(pool.at[tables[s, j]], buf.at[slot],
+                                     sem.at[slot])
+
+    # warm-up: fill the buffer ring before the first wait
+    for d in range(min(depth, max_pages)):
+        @pl.when(d < n_pages)
+        def _start(d=d):
+            dma(d, d).start()
+
+    H, hd = q_ref.shape
+    qh = (q_ref[...].astype(jnp.float32) * sm_scale).reshape(n_kv, rep, hd)
+
+    def body(j, carry):
+        acc, m, l = carry
+        slot = jax.lax.rem(j, depth)
+        dma(j, slot).wait()
+        kv = buf[slot].astype(jnp.float32).reshape(page_size, n_kv, 2, hd)
+        k, v = kv[:, :, 0, :], kv[:, :, 1, :]
+        sc = jnp.concatenate(
+            [jax.lax.dot_general(qh[g], k[:, g], (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+             for g in range(n_kv)], axis=0)                   # (H, ps)
+        pos = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1)
+        mask = pos < length          # ragged tail: pad positions masked
+        sc = jnp.where(mask, sc, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(sc, -1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(mask, jnp.exp(sc - m_new), 0.0)
+        l_new = l * alpha + jnp.sum(p, -1, keepdims=True)
+        ph = p.reshape(n_kv, rep, page_size)
+        onew = jnp.concatenate(
+            [jax.lax.dot_general(ph[g], v[:, g], (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+             for g in range(n_kv)], axis=0)                   # (H, hd)
+        # refill this slot only after page j's compute consumed it — with
+        # depth >= 2 the other depth-1 slots' DMAs are already in flight
+        # behind this compute, which is the overlap the sweep measures
+        @pl.when(j + depth < n_pages)
+        def _next():
+            dma(j + depth, slot).start()
+        return acc * alpha + onew, m_new, l_new
+
+    acc0 = jnp.zeros((H, hd), jnp.float32)
+    m0 = jnp.full((H, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((H, 1), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, n_pages, body, (acc0, m0, l0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention_fwd(q, pool, tables, lengths, *, buffer_depth=2,
+                        sm_scale=None, interpret=None):
+    """q: (S, H, hd) one decode token per sequence;
+    pool: (n_pages, page_size, 2*Kv, hd) head-interleaved K/V pages;
+    tables: (S, max_pages) int32 page ids (trash-padded past each
+    sequence's reserved pages); lengths: (S,) valid tokens per sequence.
+    Returns (S, H, hd).  ``buffer_depth`` is the number of page buffers
+    kept in flight (static; clamped to [1, max_pages])."""
+    interpret = resolve_interpret(interpret)
+    S, H, hd = q.shape
+    _, page_size, kv2, _ = pool.shape
+    n_kv = kv2 // 2
+    rep = H // n_kv
+    assert n_kv * rep == H, (H, n_kv)
+    max_pages = tables.shape[1]
+    depth = max(1, min(buffer_depth, max_pages))
+    sm_scale = sm_scale if sm_scale is not None else hd ** -0.5
+    kern = functools.partial(
+        _decode_kernel, page_size=page_size, depth=depth,
+        max_pages=max_pages, n_kv=n_kv, rep=rep, sm_scale=sm_scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(S,),
+        in_specs=[pl.BlockSpec((None, H, hd), lambda s, *_: (s, 0, 0)),
+                  pl.BlockSpec(memory_space=pltpu.ANY)],   # pool stays HBM
+        out_specs=pl.BlockSpec((None, H, hd), lambda s, *_: (s, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((depth, page_size, kv2, hd), pool.dtype),
+                        pltpu.SemaphoreType.DMA((depth,))],
+    )
+    return pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, H, hd), q.dtype),
+        interpret=interpret,
+    )(tables, lengths, q, pool)
+
+
+def paged_attention_xla(q, pool, tables, lengths, *, buffer_depth=2,
+                        sm_scale=None):
+    """Pure-XLA twin of the kernel: scan over the block table in chunks
+    of ``buffer_depth`` pages (gathered together, folded into the same
+    online softmax).  Identical math and walk order; the depth knob here
+    amortizes per-page gather/dispatch overhead rather than overlapping
+    DMA, so the page-size x depth sweep stays observable on CPU."""
+    S, H, hd = q.shape
+    n_pages_tot, page_size, kv2, _ = pool.shape
+    n_kv = kv2 // 2
+    rep = H // n_kv
+    max_pages = tables.shape[1]
+    depth = max(1, min(buffer_depth, max_pages))
+    sm_scale = sm_scale if sm_scale is not None else hd ** -0.5
+    n_chunks = -(-max_pages // depth)
+    pad = n_chunks * depth - max_pages
+    # pad ragged chunk tails with the trash page (id n_pages_tot - 1 by
+    # construction, serve/paged.py) — masked below, never contributes
+    tbl = jnp.pad(tables, ((0, 0), (0, pad)), constant_values=n_pages_tot - 1)
+    tbl = tbl.reshape(S, n_chunks, depth).swapaxes(0, 1)    # (C, S, depth)
+    pos = (jnp.arange(n_chunks * depth)[:, None] * page_size
+           + jnp.arange(page_size)[None]).reshape(n_chunks, depth * page_size)
+    qh = q.reshape(S, n_kv, rep, hd).astype(jnp.float32) * sm_scale
+
+    def body(carry, inp):
+        acc, m, l = carry
+        tbl_c, pos_c = inp
+        kv = pool[tbl_c].astype(jnp.float32).reshape(
+            S, depth * page_size, n_kv, 2, hd)
+        k, v = kv[..., 0, :], kv[..., 1, :]
+        sc = jnp.einsum("sgrh,stgh->sgrt", qh, k)           # (S,Kv,rep,T)
+        mask = pos_c[None] < lengths[:, None]               # (S, T)
+        sc = jnp.where(mask[:, None, None], sc, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(sc, -1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(mask[:, None, None],
+                      jnp.exp(sc - m_new[..., None]), 0.0)
+        l_new = l * alpha + jnp.sum(p, -1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("sgrt,stgh->sgrh", p, v)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((S, n_kv, rep, hd), jnp.float32)
+    m0 = jnp.full((S, n_kv, rep), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((S, n_kv, rep), jnp.float32)
+    (acc, _, l), _ = jax.lax.scan(body, (acc0, m0, l0), (tbl, pos))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(S, H, hd).astype(q.dtype)

@@ -30,6 +30,31 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, sm_scale=None):
     return out.reshape(B, S, H, hd).astype(q.dtype)
 
 
+def paged_attention_ref(q, pool, tables, lengths, *, sm_scale=None):
+    """Naive paged decode attention: gather every table page, full softmax.
+
+    q: (S, H, hd) one decode token per sequence; pool: (n_pages,
+    page_size, 2*Kv, hd) head-interleaved K/V; tables: (S, max_pages)
+    page ids; lengths: (S,) valid tokens.  Returns (S, H, hd).
+    """
+    S, H, hd = q.shape
+    _, page_size, kv2, _ = pool.shape
+    n_kv = kv2 // 2
+    rep = H // n_kv
+    max_pages = tables.shape[1]
+    sm_scale = sm_scale if sm_scale is not None else hd ** -0.5
+    kv = pool[tables].reshape(                 # (S, max_pages, ps, 2Kv, hd)
+        S, max_pages * page_size, n_kv, 2, hd).astype(jnp.float32)
+    k, v = kv[..., 0, :], kv[..., 1, :]
+    qh = q.reshape(S, n_kv, rep, hd).astype(jnp.float32) * sm_scale
+    scores = jnp.einsum("sgrh,stgh->sgrt", qh, k)
+    mask = jnp.arange(max_pages * page_size)[None] < lengths[:, None]
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("sgrt,stgh->sgrh", probs, v)
+    return out.reshape(S, H, hd).astype(q.dtype)
+
+
 def rwkv6_scan_ref(r, k, v, w, u, s0=None):
     """Naive per-step WKV-6 recurrence.
 

@@ -19,6 +19,12 @@ prefill run through the mesh-aware cells in ``serve/step.py`` over N
 devices (``--devices`` fabricates host devices for it, which is why jax
 is imported only after argument parsing — the XLA flag must be set
 before the backend initializes).
+
+``--paged`` switches the continuous engine's KV residency to the
+physical page pool (``serve/paged.py``): decode attends through the
+ragged paged-attention kernel with ``--buffer-depth`` page loads in
+flight.  Token streams are identical to the dense engine; the latency
+decomposition shows what the paging indirection costs (or saves).
 """
 from __future__ import annotations
 
@@ -70,6 +76,15 @@ def main():
                     help="tensor-parallel decode over this many devices "
                          "(continuous engine; params + per-slot KV "
                          "sequence sharded over a 'model' axis)")
+    ap.add_argument("--paged", action="store_true",
+                    help="physical paged-KV serving: one preallocated "
+                         "page pool per layer, per-request block tables, "
+                         "ragged paged-attention decode (continuous "
+                         "engine only; serve/paged.py)")
+    ap.add_argument("--buffer-depth", type=int, default=2,
+                    help="paged-attention page buffers in flight (DMA "
+                         "double-buffering on TPU, page-gather width in "
+                         "the XLA twin); needs --paged")
     ap.add_argument("--devices", type=int, default=0,
                     help="fabricate N host devices (XLA flag; must be set "
                          "before jax initializes, hence a CLI flag)")
@@ -105,6 +120,18 @@ def main():
         ap.error(f"--tp-size {args.tp_size} exceeds the "
                  f"{len(jax.devices())} visible device(s) "
                  f"(fabricate more with --devices N)")
+    if args.static and args.paged:
+        ap.error("--paged swaps the continuous engine's KV residency; "
+                 "the static engine has no paged path (drop --static)")
+    if args.buffer_depth < 1:
+        ap.error("--buffer-depth must be >= 1")
+    if args.buffer_depth != 2 and not args.paged:
+        ap.error("--buffer-depth tunes the paged-attention walk; it "
+                 "needs --paged")
+    if args.paged and args.cache_len % args.block_size:
+        ap.error(f"--paged needs --cache-len divisible by --block-size "
+                 f"({args.cache_len} % {args.block_size} != 0): blocks "
+                 f"are physical pool pages")
 
     cfg = smoke(all_archs()[args.arch])
     params = registry.init_params(cfg, jax.random.key(0))
@@ -139,7 +166,8 @@ def main():
         eng = ContinuousEngine(cfg, params, n_slots=args.batch,
                                cache_len=args.cache_len,
                                block_size=args.block_size, fabric=fabric,
-                               tp_size=args.tp_size)
+                               tp_size=args.tp_size, paged=args.paged,
+                               page_buffer_depth=args.buffer_depth)
         reqs = make_requests(spec)
         t0 = time.perf_counter()
         eng.run(reqs)
@@ -161,6 +189,8 @@ def main():
     mode = "static" if args.static else (
         f"continuous tp={args.tp_size}" if args.tp_size > 1 else
         "continuous")
+    if args.paged:
+        mode += f" paged(depth={args.buffer_depth})"
     print(f"[serve] {mode}: {len(reqs)} requests, {toks} tokens in "
           f"{elapsed:.2f}s -> {toks / elapsed:.1f} tok/s "
           f"(offered {args.rate or 'burst'} req/s)")

@@ -15,6 +15,19 @@ _DEFAULT = {
     "quant_impl": "auto",       # auto | xla | pallas — auto routes payloads
     #                             above collectives.PALLAS_QUANT_MIN_SIZE
     #                             through the Pallas kernels
+    "paged_attention_impl": "auto",  # auto | xla | pallas — the paged-KV
+    #                             decode attention (kernels/paged_attention
+    #                             via kernels/ops.paged_attention): auto
+    #                             takes the Pallas DMA-pipelined kernel on
+    #                             backends with a compiled lowering and the
+    #                             pure-XLA twin elsewhere; pallas forces
+    #                             the kernel (interpreted on CPU — the
+    #                             correctness-test path)
+    "paged_buffer_depth": 2,    # page buffers in flight in the paged-
+    #                             attention walk (DMA double-buffering on
+    #                             TPU, gather width in the XLA twin); the
+    #                             serve.paged_attention sweep pins each
+    #                             depth explicitly
     "pallas_interpret": None,   # None = auto: interpreted on CPU, compiled
     #                             on TPU/GPU (kernels.quant.resolve_interpret
     #                             keys on the backend); booleans force

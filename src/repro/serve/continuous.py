@@ -43,6 +43,17 @@ Mechanics (DESIGN.md section 11):
   ``tests/test_serve_sharded.py`` holds them equal and pins the decode
   step's per-kind collective counts).
 
+* **Paged KV (``paged=True``).**  The per-slot caches are replaced by the
+  physical page pool of ``serve/paged.py``: the allocator's block tables
+  become device arrays (one fixed-width row per slot, trash-padded), slot
+  insertion scatters the prefill cache into the request's pages, and the
+  decode step attends through the ragged paged-attention kernel with
+  ``page_buffer_depth`` page loads in flight.  The host loop, scheduler
+  and allocator decisions are IDENTICAL to the dense engine — paged is
+  purely a KV-residency change — so greedy token streams stay
+  bit-identical to dense at f32 (the differential tier in
+  ``tests/test_serve_paged.py`` holds them equal at tp=1/2/4).
+
 Inactive slots decode garbage (fixed shapes keep one compiled step); the
 results are masked on the host and every admission overwrites the whole
 slot cache, so garbage never leaks into a live request.
@@ -62,7 +73,7 @@ from repro.configs.base import ArchConfig
 from repro.parallel import compat
 from repro.serve.kv import KVBlockAllocator, blocks_for
 from repro.serve.scheduler import ServeRequest, SlotScheduler
-from repro.serve.step import make_continuous_cells
+from repro.serve.step import make_continuous_cells, make_paged_cells
 
 
 @dataclass(frozen=True)
@@ -95,7 +106,9 @@ class ContinuousEngine:
                  kv_blocks: Optional[int] = None,
                  prefill_per_step: Optional[int] = None,
                  clock: Callable[[], float] = time.perf_counter,
-                 fabric=None, mesh=None, tp_size: int = 1):
+                 fabric=None, mesh=None, tp_size: int = 1,
+                 paged: bool = False, page_buffer_depth: int = 2,
+                 debug: bool = False):
         # fabric: an optional repro.fabric.ServeFabric — the degraded-wire
         # enforcement point for serving.  Its stall_admit runs before each
         # admitted prefill (TTFT inflates, queue_wait does not) and
@@ -108,10 +121,18 @@ class ContinuousEngine:
         # mesh / tp_size: tensor-parallel decode.  ``tp_size=N`` builds a
         # (1, N) ("data", "model") mesh over the visible devices; an
         # explicit ``mesh=`` wins when given.
+        #
+        # paged / page_buffer_depth: physical paged-KV serving (module
+        # docstring).  debug=True re-checks the allocator invariants on
+        # every slot recycle (KVBlockAllocator.check) — cheap at serve
+        # scale, and it catches table corruption at the step that caused
+        # it rather than at teardown.
         self.cfg = cfg
         self.n_slots = n_slots
         self.cache_len = cache_len
         self.clock = clock
+        self.paged = bool(paged)
+        self.debug = bool(debug)
         self.fabric = fabric if fabric is not None \
             and not fabric.is_clean else None
         if mesh is None and tp_size > 1:
@@ -122,12 +143,19 @@ class ContinuousEngine:
                     f"device(s); fabricate more with "
                     f"XLA_FLAGS=--xla_force_host_platform_device_count=N")
             mesh = compat.make_mesh((1, tp_size), ("data", "model"))
-        self.cells = make_continuous_cells(cfg, n_slots, cache_len,
-                                           mesh=mesh)
-        self.tp_size = self.cells.tp_size
-        self.params = self.cells.put_params(params)
         if kv_blocks is None:
             kv_blocks = n_slots * blocks_for(cache_len, block_size)
+        if self.paged:
+            # pool pages = allocatable blocks + the trash page the padded
+            # table rows point at (serve/kv.py)
+            self.cells = make_paged_cells(
+                cfg, n_slots, cache_len, block_size, kv_blocks + 1,
+                mesh=mesh, buffer_depth=page_buffer_depth)
+        else:
+            self.cells = make_continuous_cells(cfg, n_slots, cache_len,
+                                               mesh=mesh)
+        self.tp_size = self.cells.tp_size
+        self.params = self.cells.put_params(params)
         # n_shards frames the allocator's placement() view only — every
         # admission decision stays in logical positions, device-blind
         self.kv = KVBlockAllocator(n_blocks=kv_blocks,
@@ -143,7 +171,14 @@ class ContinuousEngine:
         self._prefill = self.cells.prefill
         self._decode = self.cells.decode
         self._insert = self.cells.insert
-        self._caches = self.cells.init_slot_caches()
+        if self.paged:
+            self._pool = self.cells.init_pool()
+            self._tables_np = np.full(
+                (n_slots, self.cells.max_pages), self.kv.trash_page,
+                np.int32)
+            self._tables_dev = jnp.asarray(self._tables_np)
+        else:
+            self._caches = self.cells.init_slot_caches()
         self._tok = np.zeros((n_slots,), np.int32)
         self._idx = np.zeros((n_slots,), np.int32)
 
@@ -181,8 +216,19 @@ class ContinuousEngine:
         logits, slot_caches = self._prefill(
             self.params, jnp.asarray(req.prompt, jnp.int32)[None])
         first = int(jnp.argmax(logits[0, -1]))
-        self._caches = self._insert(self._caches, slot_caches,
-                                    jnp.int32(slot))
+        if self.paged:
+            # the request's pages, trash-padded to the fixed table width;
+            # insertion scatters the whole prefill cache into them
+            row = np.asarray(
+                self.kv.padded_table(req.rid, self.cells.max_pages),
+                np.int32)
+            self._pool = self._insert(self._pool, slot_caches,
+                                      jnp.asarray(row))
+            self._tables_np[slot] = row
+            self._tables_dev = jnp.asarray(self._tables_np)
+        else:
+            self._caches = self._insert(self._caches, slot_caches,
+                                        jnp.int32(slot))
         self._tok[slot] = first
         self._idx[slot] = len(req.prompt)
         req.generated.append(first)
@@ -201,10 +247,16 @@ class ContinuousEngine:
             # absorb the injected delay; the straggler term applies here —
             # a batched step moves at the pace of its slowest device
             self.fabric.stall_decode()
-        logits, self._caches = self._decode(
-            self.params, jnp.asarray(self._tok)[:, None, None],
-            jnp.asarray(self._idx), self._caches)
-        nxt = np.asarray(jnp.argmax(logits[:, 0, -1], axis=-1))  # host sync
+        if self.paged:
+            logits, self._pool = self._decode(
+                self.params, jnp.asarray(self._tok)[:, None],
+                jnp.asarray(self._idx), self._pool, self._tables_dev)
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))  # host sync
+        else:
+            logits, self._caches = self._decode(
+                self.params, jnp.asarray(self._tok)[:, None, None],
+                jnp.asarray(self._idx), self._caches)
+            nxt = np.asarray(jnp.argmax(logits[:, 0, -1], axis=-1))  # host
         now = self.clock() - self._t0
         decoded = []
         for slot, req in active:
@@ -224,6 +276,14 @@ class ContinuousEngine:
         # the next admission overwrites the whole slot cache anyway
         self._tok[slot] = 0
         self._idx[slot] = 0
+        if self.paged:
+            # the freed pages are back in the pool — point the slot's
+            # table row at the trash page so its garbage decode can never
+            # write into a page the next reservation hands out
+            self._tables_np[slot] = self.kv.trash_page
+            self._tables_dev = jnp.asarray(self._tables_np)
+        if self.debug:
+            self.kv.check()
 
     # -- run loop ----------------------------------------------------------
 

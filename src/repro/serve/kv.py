@@ -4,13 +4,22 @@ The serving engine admits a request only when the shared block pool can
 cover its whole lifetime (prompt + ``max_new_tokens``), vLLM-style block
 granularity with conservative up-front reservation: an admitted request
 can never stall mid-decode waiting for memory, so the scheduler needs no
-preemption path.  Blocks are bookkeeping over the engine's dense per-slot
-cache (see DESIGN.md section 11): each block covers ``block_size``
-consecutive token positions of one request's cache, and the pool being
-*shared* across slots is what makes admission a memory decision, not just
-a slot decision — a free slot with an exhausted pool stays empty, which
-is exactly the HBM-pressure behavior the ``serve.load_sweep``
-characterization wants observable.
+preemption path.  The pool being *shared* across slots is what makes
+admission a memory decision, not just a slot decision — a free slot with
+an exhausted pool stays empty, which is exactly the HBM-pressure behavior
+the ``serve.load_sweep`` characterization wants observable.
+
+Blocks are *physical* in the paged engine (DESIGN.md section 14): block
+id ``b`` names page ``b`` of the preallocated ``[n_pages, block_size,
+2*n_kv_heads, head_dim]`` pool tensor ``serve/paged.py`` materializes per
+attention layer, so the table this allocator hands out is exactly the
+page indirection the ragged paged-attention kernel walks.  One extra
+*trash page* (id ``n_blocks``) sits past the allocatable pool: device
+block tables are fixed-width, and rows are padded with the trash id so
+unreserved pages have somewhere harmless to point — it is never
+allocated, and reads from it are always masked by the per-sequence
+length.  The dense per-slot engine (``paged=False``) keeps using the same
+allocator as pure bookkeeping over its slot caches (DESIGN.md sec. 11).
 
 The allocator is **device-count-blind**: every decision (``can_reserve``,
 ``reserve``, ``release``) is made in *logical token positions*, never in
@@ -55,6 +64,7 @@ class KVBlockAllocator:
     n_shards: int = 1
     _free: list = field(default_factory=list)       # LIFO free stack
     _tables: dict = field(default_factory=dict)     # rid -> [block ids]
+    _sizes: dict = field(default_factory=dict)      # rid -> reserved tokens
 
     def __post_init__(self):
         assert self.n_blocks > 0 and self.block_size > 0
@@ -70,6 +80,19 @@ class KVBlockAllocator:
     @property
     def n_used(self) -> int:
         return self.n_blocks - len(self._free)
+
+    # -- physical frame (the paged pool's page space) ----------------------
+
+    @property
+    def trash_page(self) -> int:
+        """Page id fixed-width table rows are padded with: one past the
+        allocatable blocks, never reserved, reads always length-masked."""
+        return self.n_blocks
+
+    @property
+    def n_pages(self) -> int:
+        """Physical pages the pool tensor allocates (blocks + trash)."""
+        return self.n_blocks + 1
 
     def blocks_for(self, n_tokens: int) -> int:
         return blocks_for(n_tokens, self.block_size)
@@ -91,14 +114,42 @@ class KVBlockAllocator:
                 f"{len(self._free)} free of {self.n_blocks}")
         table = [self._free.pop() for _ in range(need)]
         self._tables[rid] = table
+        self._sizes[rid] = max(n_tokens, 0)
         return list(table)
 
     def table(self, rid: int) -> list[int]:
         return list(self._tables[rid])
 
+    def tokens_for(self, rid: int) -> int:
+        """Token count ``rid`` reserved for (its admission lifetime)."""
+        return self._sizes[rid]
+
+    def padded_table(self, rid: int, max_pages: int) -> list[int]:
+        """``rid``'s table as a fixed-width device-table row: the owned
+        page ids, then ``trash_page`` out to ``max_pages`` entries."""
+        table = self._tables[rid]
+        assert len(table) <= max_pages, (rid, len(table), max_pages)
+        return table + [self.trash_page] * (max_pages - len(table))
+
+    def free_table_row(self, max_pages: int) -> list[int]:
+        """The table row of a slot holding no request: all trash."""
+        return [self.trash_page] * max_pages
+
+    def page_spans(self, rid: int) -> list[tuple[int, int, int]]:
+        """``(page_id, token_start, token_end)`` per owned page — an exact
+        partition of ``rid``'s reserved tokens (property-tested): spans
+        are contiguous, disjoint, and cover ``[0, tokens_for(rid))``."""
+        bs = self.block_size
+        n = self._sizes[rid]
+        return [(b, i * bs, min((i + 1) * bs, n))
+                for i, b in enumerate(self._tables[rid])]
+
     def release(self, rid: int) -> int:
         """Return every block owned by ``rid`` to the pool."""
+        if rid not in self._tables:
+            raise KeyError(f"request {rid} holds no KV blocks")
         table = self._tables.pop(rid)
+        self._sizes.pop(rid)
         self._free.extend(reversed(table))
         return len(table)
 
@@ -147,3 +198,8 @@ class KVBlockAllocator:
         assert not set(owned) & set(self._free), "owned block also free"
         assert len(owned) + len(self._free) == self.n_blocks, \
             (len(owned), len(self._free), self.n_blocks)
+        assert self.trash_page not in owned, "trash page allocated"
+        assert set(self._sizes) == set(self._tables), "size/table drift"
+        for rid, table in self._tables.items():
+            assert len(table) == self.blocks_for(self._sizes[rid]), \
+                (rid, len(table), self._sizes[rid])

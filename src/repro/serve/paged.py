@@ -1,0 +1,192 @@
+"""Physical block-paged KV: pool tensors, page insertion, paged decode.
+
+The dense continuous engine stacks a full ``cache_len`` KV cache per
+slot; the paged engine replaces that with ONE preallocated pool tensor
+per attention layer — shape ``(G, n_pages, block_size, 2*Kv, hd)`` (group
+scan dim, then pages) with K/V *head-interleaved* on the fused head axis
+(``[k0, v0, k1, v1, ...]``): a page is the unit of both allocation
+(``serve/kv.py`` block ids ARE page ids) and data movement (one DMA per
+page moves keys and values together).  Requests own pages through the
+allocator's block tables; the device sees fixed-width table rows padded
+with the trash page (id ``n_blocks``), so the decode step's shapes never
+depend on how many pages a request holds.
+
+Three jit-able pieces (wired into cells by ``serve/step.py``):
+
+* ``init_kv_pool`` — the pool pytree (zeros; one leaf per layer-in-group,
+  all layers share one block table since every layer caches the same
+  positions).
+* ``insert_pages`` — admission: scatter a batch-1 prefill cache into the
+  request's pages, one ``dynamic_update_slice`` per page (pages past the
+  reservation land on the trash page, harmlessly).
+* ``paged_decode_step`` — the batched decode step over all slots: project
+  q/k/v per slot, write each slot's new token into its current page
+  (``dynamic_update_slice`` at ``(table[idx // bs], idx % bs)``), then
+  attend over the block table via ``kernels/ops.paged_attention`` — the
+  ragged paged-attention kernel (or its XLA twin) walking pages with
+  ``buffer_depth`` loads in flight.  Non-attention sublayers (norms,
+  MLP/MoE, residuals, logits) reuse the exact ``models/transformer`` code,
+  which is what keeps paged token streams bit-identical to the dense
+  engine at f32 (differential-tested at tp=1/2/4).
+
+Paged serving supports all-attention families with full (non-windowed)
+attention — the architectures where a physical page pool buys long
+context and oversubscription; SSM/hybrid/SWA states keep the dense path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common, transformer
+from repro.parallel import sharding
+
+
+def paged_supported(cfg: ArchConfig) -> bool:
+    """Every layer an attention layer, no sliding window."""
+    return (cfg.family != "ssm" and cfg.sliding_window == 0
+            and all(cfg.is_attn_layer(i) for i in range(cfg.layer_group)))
+
+
+def check_paged(cfg: ArchConfig, cache_len: int, block_size: int) -> None:
+    if not paged_supported(cfg):
+        raise ValueError(
+            f"paged KV serving needs an all-attention, non-windowed arch; "
+            f"{cfg.name} (family={cfg.family}, "
+            f"sliding_window={cfg.sliding_window}) keeps the dense path")
+    if cache_len % block_size:
+        raise ValueError(
+            f"paged KV needs cache_len divisible by block_size "
+            f"({cache_len} % {block_size} != 0): pages tile the cache")
+
+
+def fuse_kv(k: jax.Array, v: jax.Array) -> jax.Array:
+    """Interleave K/V along the head axis: (..., Kv, hd) x2 ->
+    (..., 2*Kv, hd) ordered [k0, v0, k1, v1, ...]."""
+    stacked = jnp.stack([k, v], axis=-2)        # (..., Kv, 2, hd)
+    return stacked.reshape(stacked.shape[:-3]
+                           + (2 * k.shape[-2], k.shape[-1]))
+
+
+def init_kv_pool(cfg: ArchConfig, n_pages: int, block_size: int):
+    """Zeroed pool pytree: ``{"l{i}": (G, n_pages, bs, 2*Kv, hd)}``."""
+    pool = jnp.zeros((cfg.num_groups(), n_pages, block_size,
+                      2 * cfg.num_kv_heads, cfg.hd), common.dtype_of(cfg))
+    return {f"l{i}": pool for i in range(cfg.layer_group)}
+
+
+def _constrain_pool(pool_l):
+    """Pool split over 'model' on the fused head axis (pruned by
+    ``safe_spec`` when 2*Kv is not divisible); pages/positions local."""
+    return sharding.constrain(pool_l, *([None] * (pool_l.ndim - 2)),
+                              "heads", None)
+
+
+def insert_pages(cfg: ArchConfig, pool, base_caches, table_row):
+    """Scatter a batch-1 prefill cache into the pages of ``table_row``.
+
+    ``base_caches``: the prefill cell's output (``{"l{i}": {"k": (G, 1,
+    cache_len, Kv, hd), ...}}``); ``table_row``: (max_pages,) int32 page
+    ids, trash-padded.  One ``dynamic_update_slice`` per page per layer —
+    the whole row is written (a fresh admission overwrites any stale page
+    content; writes past the reservation land on the trash page).
+    """
+    bs = next(iter(pool.values())).shape[2]
+    new_pool = {}
+    for key, pool_l in pool.items():
+        cache = base_caches[key]
+        fused = fuse_kv(cache["k"][:, 0], cache["v"][:, 0])  # (G,S,2Kv,hd)
+        fused = fused.astype(pool_l.dtype)
+        max_pages = fused.shape[1] // bs
+        assert table_row.shape[0] >= max_pages, \
+            (table_row.shape, max_pages)
+        for j in range(max_pages):
+            page = fused[:, None, j * bs:(j + 1) * bs]   # (G,1,bs,2Kv,hd)
+            pool_l = jax.lax.dynamic_update_slice(
+                pool_l, page, (0, table_row[j], 0, 0, 0))
+        new_pool[key] = _constrain_pool(pool_l)
+    return new_pool
+
+
+# ---------------------------------------------------------------------------
+# paged decode step
+# ---------------------------------------------------------------------------
+
+def _paged_attn_decode(cfg: ArchConfig, p: dict, x, pool_l, idx, tables, *,
+                       buffer_depth):
+    """Batched one-token paged attention for one layer.
+
+    x: (S, 1, D) normed activations for every slot; pool_l: (n_pages, bs,
+    2*Kv, hd) — the group dim was consumed by the caller's scan; idx:
+    (S,) per-slot positions; tables: (S, max_pages).  Returns (y (S,1,D),
+    updated pool_l).  Mirrors ``models/attention.attn_decode`` exactly
+    (projection, rope at ``idx``, write-then-attend, output projection)
+    with the cache swapped for pool pages.
+    """
+    from repro.kernels import ops as kops
+    H, Kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    S = x.shape[0]
+    bs = pool_l.shape[1]
+
+    q = common.dense(p["q"], x).reshape(S, 1, H, hd)
+    k = common.dense(p["k"], x).reshape(S, 1, Kv, hd)
+    v = common.dense(p["v"], x).reshape(S, 1, Kv, hd)
+    pos = idx[:, None].astype(jnp.int32)                 # (S, 1)
+    q = common.apply_rope(q, pos, cfg.rope_theta)
+    k = common.apply_rope(k, pos, cfg.rope_theta)
+
+    # write each slot's new token into its current page — the paged form
+    # of the dense path's cache dynamic_update_slice (free slots write the
+    # trash page: their tables are all-trash, reads stay length-masked)
+    fused = fuse_kv(k[:, 0], v[:, 0]).astype(pool_l.dtype)   # (S, 2Kv, hd)
+    for s in range(S):
+        page, off = tables[s, idx[s] // bs], idx[s] % bs
+        pool_l = jax.lax.dynamic_update_slice(
+            pool_l, fused[s][None, None], (page, off, 0, 0))
+    pool_l = _constrain_pool(pool_l)
+
+    out = kops.paged_attention(q[:, 0], pool_l, tables, idx + 1,
+                               buffer_depth=buffer_depth)    # (S, H, hd)
+    out = out.reshape(S, 1, H * hd)
+    y = common.dense(p["o"], out)
+    return y, pool_l
+
+
+def _paged_layer_decode(cfg: ArchConfig, p: dict, x, pool_l, idx, tables, *,
+                        buffer_depth):
+    """``transformer._layer_decode`` with paged attention."""
+    h = common.norm_apply(cfg, p["norm1"], x)
+    y, pool_l = _paged_attn_decode(cfg, p["attn"], h, pool_l, idx, tables,
+                                   buffer_depth=buffer_depth)
+    if cfg.parallel_block:
+        f, _ = transformer._ffn(cfg, p, h)
+        return x + y + f, pool_l
+    x = x + y
+    h2 = common.norm_apply(cfg, p["norm2"], x)
+    f, _ = transformer._ffn(cfg, p, h2)
+    return x + f, pool_l
+
+
+def paged_decode_step(cfg: ArchConfig, params: dict, tokens, idx, pool,
+                      tables, *, buffer_depth=2):
+    """One decode step for every slot against the paged pool.
+
+    tokens: (S, 1) int32; idx: (S,) per-slot positions; pool: the
+    ``init_kv_pool`` pytree; tables: (S, max_pages) int32.  Returns
+    (logits (S, 1, V) fp32, updated pool).
+    """
+    x = params["embed"]["embedding"][tokens]             # (S, 1, D)
+
+    def body(x, inp):
+        gp, pool_g = inp
+        new = {}
+        for i in range(cfg.layer_group):
+            x, new[f"l{i}"] = _paged_layer_decode(
+                cfg, gp[f"l{i}"], x, pool_g[f"l{i}"], idx, tables,
+                buffer_depth=buffer_depth)
+        return x, new
+
+    x, new_pool = jax.lax.scan(body, x, (params["layers"], pool))
+    x = common.norm_apply(cfg, params["final_norm"], x)
+    return transformer._logits(cfg, params, x), new_pool

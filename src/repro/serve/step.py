@@ -208,6 +208,151 @@ class ServeCells:
         return dict(hlo.collective_counts(ops))
 
 
+@dataclass
+class PagedServeCells:
+    """The paged engine's three compiled cells + their placements.
+
+    The dense :class:`ServeCells` stack per-slot caches; here the KV state
+    is ONE physical page pool per layer (``serve/paged.py``) and the slot
+    dimension lives in the block *tables* — decode takes every slot's
+    token/position plus the (n_slots, max_pages) table array and returns
+    updated pool state.  Sharded builds split the pool over 'model' on the
+    fused head axis and replicate tables/tokens, mirroring the dense
+    cells' reshard-free call boundary.
+    """
+    cfg: ArchConfig
+    n_slots: int
+    cache_len: int
+    block_size: int
+    n_pages: int
+    buffer_depth: int
+    prefill: Callable        # (params, tokens[1,S]) -> (logits, base caches)
+    decode: Callable         # (params, tok[S,1], idx[S], pool, tables[S,mp])
+    insert: Callable         # (pool, base caches, table_row[mp]) -> pool
+    mesh: Optional[object] = None
+    ctx: Optional[sharding.ShardingCtx] = None
+    param_sharding: Optional[object] = None     # pytree of NamedSharding
+    pool_sharding: Optional[object] = None      # pool pytree of NamedSharding
+    _decode_text: Optional[str] = field(default=None, repr=False)
+
+    @property
+    def max_pages(self) -> int:
+        return self.cache_len // self.block_size
+
+    @property
+    def tp_size(self) -> int:
+        return 1 if self.mesh is None else int(dict(self.mesh.shape)
+                                               .get("model", 1))
+
+    @property
+    def n_devices(self) -> int:
+        return 1 if self.mesh is None else self.mesh.size
+
+    def put_params(self, params):
+        if self.param_sharding is None:
+            return params
+        return jax.device_put(params, self.param_sharding)
+
+    def init_pool(self):
+        from repro.serve import paged
+        pool = paged.init_kv_pool(self.cfg, self.n_pages, self.block_size)
+        if self.pool_sharding is None:
+            return pool
+        return jax.device_put(pool, self.pool_sharding)
+
+    def decode_hlo_text(self, params) -> str:
+        """Compiled HLO of the paged-decode cell (abstract args; cached)."""
+        if self._decode_text is None:
+            p = jax.tree_util.tree_map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+            tok = jax.ShapeDtypeStruct((self.n_slots, 1), jnp.int32)
+            idx = jax.ShapeDtypeStruct((self.n_slots,), jnp.int32)
+            pool = jax.tree_util.tree_map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                jax.eval_shape(self.init_pool))
+            tbl = jax.ShapeDtypeStruct((self.n_slots, self.max_pages),
+                                       jnp.int32)
+            self._decode_text = self.decode.lower(
+                p, tok, idx, pool, tbl).compile().as_text()
+        return self._decode_text
+
+    def decode_collective_counts(self, params) -> dict:
+        from repro.analysis import hlo
+        ops = hlo.parse_collectives(self.decode_hlo_text(params),
+                                    self.n_devices)
+        return dict(hlo.collective_counts(ops))
+
+
+def make_paged_cells(cfg: ArchConfig, n_slots: int, cache_len: int,
+                     block_size: int, n_pages: int, mesh=None,
+                     buffer_depth: int = 2) -> PagedServeCells:
+    """Build the paged engine's cells, single-device or sharded.
+
+    ``n_pages`` counts *physical* pages (the allocator's blocks plus its
+    trash page); ``buffer_depth`` is baked into the decode cell as the
+    static pipelining knob of the paged-attention walk.
+    """
+    from repro.serve import paged
+
+    paged.check_paged(cfg, cache_len, block_size)
+
+    def _prefill(params, tokens):
+        return registry.prefill(cfg, params, {"tokens": tokens},
+                                cache_len=cache_len)
+
+    def _decode(params, tokens, index, pool, tables):
+        return paged.paged_decode_step(cfg, params, tokens, index, pool,
+                                       tables, buffer_depth=buffer_depth)
+
+    def _insert(pool, base_caches, table_row):
+        return paged.insert_pages(cfg, pool, base_caches, table_row)
+
+    if mesh is None:
+        return PagedServeCells(
+            cfg=cfg, n_slots=n_slots, cache_len=cache_len,
+            block_size=block_size, n_pages=n_pages,
+            buffer_depth=buffer_depth,
+            prefill=jax.jit(_prefill),
+            decode=jax.jit(_decode, donate_argnums=3),
+            insert=jax.jit(_insert, donate_argnums=0))
+
+    ctx = sharding.ShardingCtx(
+        mesh, sharding.decode_rules("pod" in mesh.axis_names, False))
+    pspec = sharding.param_shardings(registry.abstract_params(cfg), ctx)
+    pool_shape = jax.eval_shape(
+        lambda: paged.init_kv_pool(cfg, n_pages, block_size))
+    poolspec = jax.tree_util.tree_map(
+        lambda a: compat.named_sharding(mesh, sharding.safe_spec(
+            a.shape, (None,) * (len(a.shape) - 2) + ("heads", None), ctx)),
+        pool_shape)
+    base_shape = registry.abstract_decode_caches(cfg, 1, cache_len)
+    bspec = cache_shardings(base_shape, ctx)
+    rep = compat.named_sharding(mesh, P())
+
+    def pre(params, tokens):
+        with sharding.use_ctx(ctx):
+            return _prefill(params, tokens)
+
+    def dec(params, tokens, index, pool, tables):
+        with sharding.use_ctx(ctx):
+            return _decode(params, tokens, index, pool, tables)
+
+    def ins(pool, base_caches, table_row):
+        with sharding.use_ctx(ctx):
+            return _insert(pool, base_caches, table_row)
+
+    return PagedServeCells(
+        cfg=cfg, n_slots=n_slots, cache_len=cache_len,
+        block_size=block_size, n_pages=n_pages, buffer_depth=buffer_depth,
+        prefill=jax.jit(pre, in_shardings=(pspec, rep),
+                        out_shardings=(rep, bspec)),
+        decode=jax.jit(dec, in_shardings=(pspec, rep, rep, poolspec, rep),
+                       out_shardings=(rep, poolspec), donate_argnums=3),
+        insert=jax.jit(ins, in_shardings=(poolspec, bspec, rep),
+                       out_shardings=poolspec, donate_argnums=0),
+        mesh=mesh, ctx=ctx, param_sharding=pspec, pool_sharding=poolspec)
+
+
 def make_continuous_cells(cfg: ArchConfig, n_slots: int, cache_len: int,
                           mesh=None) -> ServeCells:
     """Build the continuous engine's cells, single-device or sharded.

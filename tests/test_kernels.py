@@ -22,6 +22,28 @@ def test_flash_attention_matches_ref(B, S, H, Kv, hd, causal, window):
     assert jnp.max(jnp.abs(got - want)) < 2e-5
 
 
+@pytest.mark.parametrize("S,block_q,block_k,causal,window", [
+    (130, 64, 64, True, 0),    # ragged tail past the last full block
+    (100, 32, 64, True, 0),    # blocks of different sizes, both ragged
+    (77, 32, 32, False, 0),    # non-causal: pad keys masked only by kpos<S
+    (130, 64, 64, True, 48),   # sliding window across the ragged tail
+])
+def test_flash_attention_ragged_tail(S, block_q, block_k, causal, window):
+    """Sequence lengths that do not tile the block grid: the kernel pads
+    up, masks the pad keys (kpos < S) and slices the pad rows off — the
+    fwd output must match the unpadded reference exactly (within fp32
+    reduction noise)."""
+    ks = jax.random.split(jax.random.key(21), 3)
+    q = jax.random.normal(ks[0], (2, S, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (2, S, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (2, S, 2, 16), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=block_q, block_k=block_k)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    assert got.shape == want.shape
+    assert jnp.max(jnp.abs(got - want)) < 2e-5
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_flash_attention_dtypes(dtype):
     ks = jax.random.split(jax.random.key(1), 3)
@@ -128,6 +150,107 @@ def test_policy_flip_redispatches_without_stale_jit_cache(monkeypatch):
         trace_all()   # policy flip, same shape: MUST retrace, not reuse
     assert seen_fa == [True, False], seen_fa
     assert seen_rs == [True, False], seen_rs
+
+
+def _paged_case(seed, S, H, Kv, hd, page_size, max_pages, lengths):
+    """Random pool + per-sequence page tables (distinct pages, trash-padded
+    rows for sequences that need fewer than max_pages)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    n_blocks = S * max_pages
+    trash = n_blocks
+    q = jnp.asarray(rng.standard_normal((S, H, hd)), jnp.float32)
+    pool = jnp.asarray(rng.standard_normal((n_blocks + 1, page_size,
+                                            2 * Kv, hd)), jnp.float32)
+    perm = rng.permutation(n_blocks)
+    tables = np.full((S, max_pages), trash, np.int32)
+    k = 0
+    for s, n in enumerate(lengths):
+        need = -(-n // page_size)
+        tables[s, :need] = perm[k:k + need]
+        k += need
+    return q, pool, jnp.asarray(tables), jnp.asarray(lengths, jnp.int32)
+
+
+@pytest.mark.parametrize("depth", [1, 2, 4])
+@pytest.mark.parametrize("S,H,Kv,hd,ps,max_pages,lengths", [
+    (4, 4, 2, 16, 8, 6, (1, 13, 40, 48)),     # ragged incl. page-aligned
+    (3, 8, 8, 32, 4, 8, (32, 7, 19)),         # MHA (rep=1), odd tails
+    (2, 2, 1, 64, 16, 2, (16, 31)),           # single kv head, wide hd
+])
+def test_paged_attention_kernel_matches_ref(depth, S, H, Kv, hd, ps,
+                                            max_pages, lengths):
+    """The Pallas decode kernel (interpret — the DMA pipeline runs under
+    the interpreter on CPU) and its XLA twin both match the full-softmax
+    oracle at every buffer depth, on ragged lengths with trash-padded
+    tables."""
+    from repro.kernels import paged_attention as pa
+    q, pool, tables, lens = _paged_case(17, S, H, Kv, hd, ps, max_pages,
+                                        lengths)
+    want = ref.paged_attention_ref(q, pool, tables, lens)
+    got_k = pa.paged_attention_fwd(q, pool, tables, lens,
+                                   buffer_depth=depth, interpret=True)
+    got_x = pa.paged_attention_xla(q, pool, tables, lens,
+                                   buffer_depth=depth)
+    assert jnp.max(jnp.abs(got_k - want)) < 2e-5
+    assert jnp.max(jnp.abs(got_x - want)) < 2e-5
+
+
+def test_paged_attention_ignores_trash_and_pad_positions():
+    """Only the first ``length`` positions of a sequence's own pages may
+    contribute: corrupting the trash page, the unowned pages and the
+    owned-but-past-length tail must not move the output."""
+    from repro.kernels import paged_attention as pa
+    q, pool, tables, lens = _paged_case(23, 3, 4, 2, 16, 8, 4, (5, 17, 26))
+    base = pa.paged_attention_fwd(q, pool, tables, lens, buffer_depth=2,
+                                  interpret=True)
+    owned = set()
+    import numpy as np
+    tbl = np.asarray(tables)
+    for s, n in enumerate((5, 17, 26)):
+        owned.update(tbl[s, :-(-n // 8)].tolist())
+    poisoned = np.array(pool)
+    for p in range(poisoned.shape[0]):
+        if p not in owned:
+            poisoned[p] = 1e6            # trash + unowned pages
+    for s, n in enumerate((5, 17, 26)):
+        last = tbl[s, (n - 1) // 8]
+        poisoned[last, n % 8 or 8:] = 1e6   # past-length tail of last page
+    got = pa.paged_attention_fwd(q, jnp.asarray(poisoned), tables, lens,
+                                 buffer_depth=2, interpret=True)
+    assert jnp.max(jnp.abs(got - base)) == 0.0
+
+
+def test_paged_attention_policy_dispatch(monkeypatch):
+    """``ops.paged_attention`` routes per policy without a stale jit
+    cache: ``pallas`` forces the kernel, ``xla`` the twin, ``auto`` keys
+    on the backend (the twin on this CPU container), and the
+    ``paged_buffer_depth`` knob reaches the dispatch as a static."""
+    from repro import runtime
+    from repro.kernels import paged_attention as pa_mod
+
+    seen = []
+    real = pa_mod.paged_attention_fwd
+    monkeypatch.setattr(
+        pa_mod, "paged_attention_fwd",
+        lambda *a, **kw: seen.append(kw["buffer_depth"]) or real(*a, **kw))
+    q, pool, tables, lens = _paged_case(29, 2, 2, 1, 16, 4, 3, (3, 11))
+
+    assert not ops.use_paged_kernel()          # auto on CPU: the XLA twin
+    with runtime.use_policy(paged_attention_impl="xla"):
+        assert not ops.use_paged_kernel()
+    with runtime.use_policy(paged_attention_impl="pallas"):
+        assert ops.use_paged_kernel()
+        jax.eval_shape(lambda: ops.paged_attention(q, pool, tables, lens))
+        jax.eval_shape(lambda: ops.paged_attention(q, pool, tables, lens))
+        with runtime.use_policy(paged_buffer_depth=3):
+            jax.eval_shape(lambda: ops.paged_attention(q, pool, tables,
+                                                       lens))
+    assert seen == [2, 3], seen                # depth flip retraced; the
+    #                                            repeat call was a cache hit
+    got = ops.paged_attention(q, pool, tables, lens)   # auto path runs
+    want = ref.paged_attention_ref(q, pool, tables, lens)
+    assert jnp.max(jnp.abs(got - want)) < 2e-5
 
 
 @pytest.mark.parametrize("N,C", [(256, 512), (512, 1024), (128, 64)])

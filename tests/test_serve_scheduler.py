@@ -57,6 +57,73 @@ def test_kv_reserve_errors():
     assert kv.n_free == 4
 
 
+def test_kv_release_unknown_rid_raises():
+    """Releasing a request that holds nothing is an engine bug (a slot
+    reset that never admitted, or a double release) — it must fail loudly
+    with the rid, not silently no-op."""
+    kv = KVBlockAllocator(n_blocks=4, block_size=2)
+    with pytest.raises(KeyError, match="request 7 holds no KV blocks"):
+        kv.release(7)
+    kv.reserve(3, 4)
+    kv.release(3)
+    with pytest.raises(KeyError, match="request 3 holds no KV blocks"):
+        kv.release(3)                      # double release
+
+
+# ---------------------------------------------------------------------------
+# physical page frame (the paged pool's view of the same tables)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 24), st.integers(1, 8),
+       st.lists(st.integers(1, 40), max_size=12),
+       st.data())
+def test_page_spans_partition_and_recycle(n_blocks, block_size, sizes, data):
+    """The physical-page invariants behind ``serve/paged.py``: every live
+    request's ``page_spans`` exactly partitions ``[0, tokens_for(rid))``
+    (contiguous, disjoint, covering); no page is mapped by two live
+    requests; the trash page is never handed out and pads every
+    ``padded_table`` row; releases — interleaved with reserves, in
+    arbitrary order — restore the free set to exactly
+    ``{0..n_blocks-1}``."""
+    kv = KVBlockAllocator(n_blocks=n_blocks, block_size=block_size)
+    assert kv.trash_page == n_blocks and kv.n_pages == n_blocks + 1
+    max_pages = n_blocks                   # widest possible device row
+    live = []
+    for rid, n_tokens in enumerate(sizes):
+        if live and data.draw(st.booleans(), label=f"release before {rid}"):
+            victim = live.pop(data.draw(
+                st.integers(0, len(live) - 1), label="victim"))
+            kv.release(victim)
+        if not kv.can_reserve(n_tokens):
+            continue
+        kv.reserve(rid, n_tokens)
+        live.append(rid)
+        # spans partition the reserved tokens of every live request
+        mapped = {}
+        for r in live:
+            spans = kv.page_spans(r)
+            assert [s for _, s, _ in spans] == [
+                i * block_size for i in range(len(spans))]
+            assert all(e == min(s + block_size, kv.tokens_for(r))
+                       for _, s, e in spans)
+            assert spans[-1][2] == kv.tokens_for(r)
+            assert all(e > s for _, s, e in spans), spans
+            for page, _, _ in spans:
+                assert page not in mapped, (page, r, mapped[page])
+                assert page != kv.trash_page
+                mapped[page] = r
+        # fixed-width rows: owned pages then trash out to max_pages
+        row = kv.padded_table(rid, max_pages)
+        own = len(kv.table(rid))
+        assert row[:own] == kv.table(rid)
+        assert row[own:] == [kv.trash_page] * (max_pages - own)
+        kv.check()
+    for rid in sorted(live, key=lambda r: (r * 7919) % 64):
+        kv.release(rid)
+    assert sorted(kv._free) == list(range(n_blocks))
+    assert kv.free_table_row(max_pages) == [kv.trash_page] * max_pages
+
+
 # ---------------------------------------------------------------------------
 # scheduler + allocator, driven like the engine drives them
 # ---------------------------------------------------------------------------
