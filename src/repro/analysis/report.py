@@ -68,7 +68,7 @@ def records_table(records: Iterable[Record]) -> str:
 
 
 SERVE_SWEEPS = ("serve.load_sweep", "serve.sharded_sweep",
-                "serve.paged_attention")
+                "serve.paged_attention", "serve.slo_sweep")
 
 
 def serve_table(records: Iterable[Record]) -> str:
@@ -81,12 +81,18 @@ def serve_table(records: Iterable[Record]) -> str:
     TPOT from the metrics, queue wait from params), and the probe
     kernel's headroom FLOP/s beside the engine.  Sharded-sweep levels are
     labelled with their tensor-parallel width, paged-engine levels with
-    ``paged`` — a combined stream keeps the three data paths
-    distinguishable.
+    ``paged``, SLO-sweep levels with ``slo`` — a combined stream keeps
+    the data paths distinguishable.  A ``serve.slo_sweep`` stream gets a
+    second block: per (class, level) SLO attainment with the shed and
+    preemption accounting (DESIGN.md section 15).
     """
     by_level: dict[tuple, dict] = {}
+    slo_rows = []
     for r in records:
         if r.experiment not in SERVE_SWEEPS or r.skipped or r.error:
+            continue
+        if r.metric == "slo_attainment":
+            slo_rows.append(r)
             continue
         if not r.name.startswith("load_"):
             continue
@@ -112,6 +118,8 @@ def serve_table(records: Iterable[Record]) -> str:
             label = f"{name} tp{p.get('tp_size', '?')}"
         elif exp == "serve.paged_attention":
             label = f"{name} paged"
+        elif exp == "serve.slo_sweep":
+            label = f"{name} slo"
         else:
             label = name
         tps = lvl.get("tokens_per_sec")
@@ -125,6 +133,23 @@ def serve_table(records: Iterable[Record]) -> str:
             f"| {hr.value / 1e9:.2f} |" if tps and hr else f"| {label} | "
             "incomplete level (missing tokens_per_sec/headroom rows) "
             "| | | | | | |")
+    if slo_rows:
+        out += ["",
+                "| class level | class | attainment | requests | "
+                "shed | preempt cycles | ttft target ms | tpot target ms |",
+                "|---|---|---|---|---|---|---|---|"]
+        for r in sorted(slo_rows, key=lambda r: (
+                r.params.get("offered_mult", 0.0),
+                r.params.get("rank", 0))):
+            p = r.params
+            t = p.get("targets", {})
+            out.append(
+                f"| {r.name} | {p.get('slo_class', '?')} "
+                f"| {r.value:.0%} | {p.get('class_requests', 0)} "
+                f"| {p.get('class_shed', 0)} "
+                f"| {p.get('class_preempt_cycles', 0)} "
+                f"| {t.get('ttft_s', 0.0) * 1e3:.1f} "
+                f"| {t.get('tpot_s', 0.0) * 1e3:.1f} |")
     return "\n".join(out)
 
 

@@ -73,12 +73,13 @@ class OffloadPlan:
 
 # Rule 5 reads these sweeps in preference order: the sharded sweep —
 # where the probe contends with live decode collectives, not just decode
-# compute — is the trustworthy measurement when present; the paged sweep
-# is next (probe beside paged-pool decode traffic — the KV-residency mode
-# an offloaded deployment would actually run); the single-device dense
+# compute — is the trustworthy measurement when present; the SLO sweep is
+# next (probe beside policy-controlled trace traffic — the admission
+# regime an offloaded deployment would actually run); then the paged
+# sweep (probe beside paged-pool decode traffic); the single-device dense
 # sweep is the fallback.
-SERVE_SWEEP_EXPERIMENTS = ("serve.sharded_sweep", "serve.paged_attention",
-                           "serve.load_sweep")
+SERVE_SWEEP_EXPERIMENTS = ("serve.sharded_sweep", "serve.slo_sweep",
+                           "serve.paged_attention", "serve.load_sweep")
 
 
 def serve_offload_assessment(serve_records: Iterable[Record],
@@ -100,15 +101,35 @@ def serve_offload_assessment(serve_records: Iterable[Record],
     ``serve.load_sweep`` rows the sharded sweep wins (the offload
     verdict is only trustworthy where decode collectives and the probe
     genuinely contend); ``source`` records which stream decided.
+
+    SLO arm: when the stream carries ``serve.slo_sweep`` attainment
+    rows, the headroom floor is no longer the whole verdict — the
+    highest-priority class must also attain its SLO at fraction
+    ``min_slo_attainment`` (default: the ``serve_slo_attainment_min``
+    policy knob) at every *sustained* level.  An engine whose probe
+    still clears the FLOP/s floor while its interactive traffic misses
+    its targets has no headroom to sell — the static floor graduated to
+    an SLO-conditional verdict (DESIGN.md section 15).  ``slo_ok`` is
+    None when no attainment evidence was provided (verdict unchanged),
+    True/False otherwise.
     """
+    from repro import runtime
     if min_headroom_flops is None:
-        from repro import runtime
         min_headroom_flops = \
             float(runtime.policy()["serve_headroom_min_gflops"]) * 1e9
+    min_slo_attainment = \
+        float(runtime.policy()["serve_slo_attainment_min"])
     by_exp: dict[str, dict[str, float]] = {}
     sustained: dict[tuple[str, str], bool] = {}
+    slo_rows: list[Record] = []
     for r in serve_records:
-        if r.skipped or r.error or r.metric != "headroom_flops_per_s":
+        if r.skipped or r.error:
+            continue
+        if r.experiment == "serve.slo_sweep" \
+                and r.metric == "slo_attainment":
+            slo_rows.append(r)
+            continue
+        if r.metric != "headroom_flops_per_s":
             continue
         if r.experiment not in SERVE_SWEEP_EXPERIMENTS:
             continue        # a combined run stream carries other families
@@ -122,13 +143,38 @@ def serve_offload_assessment(serve_records: Iterable[Record],
     levels = by_exp.get(source, {})
     usable = {n: v for n, v in levels.items() if sustained[(source, n)]}
     worst = min(usable.values()) if usable else 0.0
+
+    slo_ok: Optional[bool] = None
+    slo_class = None
+    worst_att = None
+    slo_levels: dict[str, float] = {}
+    if slo_rows:
+        top_rank = min(int(r.params.get("rank", 0)) for r in slo_rows)
+        top = [r for r in slo_rows
+               if int(r.params.get("rank", 0)) == top_rank]
+        slo_class = top[0].params.get("slo_class")
+        gated = [r for r in top if r.params.get("sustained", True)]
+        slo_levels = {r.name: float(r.value) for r in gated}
+        if gated:
+            worst_att = min(slo_levels.values())
+            slo_ok = worst_att >= min_slo_attainment
+        # attainment rows exist but no level sustained: the engine is
+        # saturated everywhere — no usable SLO evidence either way
+    profitable = bool(usable) and worst >= min_headroom_flops
+    if slo_ok is False:
+        profitable = False
     return {
-        "profitable": bool(usable) and worst >= min_headroom_flops,
+        "profitable": profitable,
         "worst_headroom_flops": worst,
         "threshold_flops": min_headroom_flops,
         "levels": levels,
         "sustained_levels": sorted(usable),
         "source": source,
+        "slo_ok": slo_ok,
+        "slo_class": slo_class,
+        "worst_slo_attainment": worst_att,
+        "slo_attainment_min": min_slo_attainment,
+        "slo_levels": slo_levels,
     }
 
 
@@ -376,6 +422,16 @@ def make_plan(terms: RooflineTerms, stressor_records: Iterable[Record],
             + ("" if a["sustained_levels"] else
                " — no level sustained its offered load; rule 2 applies "
                "(don't add work to a saturated engine)"))
+        if a["slo_ok"] is not None:
+            plan.notes.append(
+                f"rule 5 SLO arm {'OK' if a['slo_ok'] else 'FAILED'}: "
+                f"'{a['slo_class']}' class worst attainment "
+                f"{a['worst_slo_attainment']:.2f} vs "
+                f"{a['slo_attainment_min']:.2f} floor over "
+                f"{len(a['slo_levels'])} sustained level(s)"
+                + ("" if a["slo_ok"] else
+                   " — headroom beside traffic that misses its SLOs is "
+                   "not sellable; offload withheld"))
         # rule 5, degraded arm: a verdict earned on a clean wire is
         # withdrawn when degraded tails blow past the tolerated p99
         # inflation or the degraded probe headroom falls under the floor

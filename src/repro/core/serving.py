@@ -28,6 +28,17 @@ workload through the static run-to-completion engine (the seed's serving
 path) and the slot-admission engine, reported as sustained token
 throughput.
 
+``slo_sweep`` closes the loop the other sweeps only observe: the engine
+runs trace-shaped traffic (bursty arrivals, heavy-tailed lengths, two
+priority classes at equal weight) under an ``SLOPolicy`` whose targets
+are derived from the run's own measured prefill/TPOT medians — so
+*attainment* is host-speed independent the same way the throughput
+relatives are.  Per offered-load level the stream carries SLO attainment
+per class, the shed fraction, and the probe headroom beside the
+controlled traffic; planner rule 5 conditions its serve-offload verdict
+on the highest-priority class's attainment when these rows are present
+(DESIGN.md section 15).
+
 All emit the unified ``Record`` stream and register through
 ``@experiment`` in ``repro.experiments.defs`` (family ``serve``).
 """
@@ -45,12 +56,14 @@ from repro.experiments.measure import measure
 from repro.experiments.record import Record
 from repro.models import registry
 from repro.serve.continuous import ContinuousEngine
-from repro.serve.loadgen import LoadSpec, make_requests
+from repro.serve.loadgen import (LoadSpec, TraceSpec, make_requests,
+                                 make_stream, make_trace)
 
 EXPERIMENT_LOAD = "serve.load_sweep"
 EXPERIMENT_SHARDED = "serve.sharded_sweep"
 EXPERIMENT_ENGINE = "serve.continuous_vs_static"
 EXPERIMENT_PAGED = "serve.paged_attention"
+EXPERIMENT_SLO = "serve.slo_sweep"
 
 # page-size x buffer-depth grid for the paged-attention microbench.  The
 # depth knob's win is page-granularity amortization (pages in flight per
@@ -99,10 +112,17 @@ def _pct(vals: Sequence[float], q: float) -> float:
 def _offered_sweep(eng, cfg, experiment: str, base_params: dict,
                    duration: float, offered: Sequence[float],
                    prompt_lens: tuple, max_new: int,
-                   max_requests: int) -> list[Record]:
+                   max_requests: int,
+                   run_deadline_s: Optional[float] = None) -> list[Record]:
     """The shared sweep body behind ``load_sweep`` and ``sharded_sweep``:
     probe-idle reference, burst capacity calibration, then one run per
     offered-load level with the probe mounted on the engine's idle hook.
+
+    ``run_deadline_s`` bounds each level on the engine clock (unfinished
+    requests shed — see ``ContinuousEngine.run``); a level can then end
+    with zero completions, so every percentile row is guarded on its
+    sample pool being non-empty (an overloaded level is reported as
+    ``completed=0`` rows, not a crash).
     """
     run_probe, probe_flops = _make_probe()
     records: list[Record] = []
@@ -142,11 +162,15 @@ def _offered_sweep(eng, cfg, experiment: str, base_params: dict,
     for k, mult in enumerate(offered):
         rate = mult * cap_rps
         n = int(min(max(rate * window, 4), max_requests))
-        reqs = make_requests(LoadSpec(n_requests=n, rate_rps=rate,
+        stream = make_stream(LoadSpec(n_requests=n, rate_rps=rate,
                                       prompt_lens=prompt_lens,
                                       max_new_tokens=max_new,
                                       vocab_size=cfg.vocab_size,
                                       seed=10 + k))
+        reqs = stream.requests
+        # the sweep's denominator is the rate the stream actually offers
+        # (a Poisson draw spans what it spans; == rate for uniform)
+        realized_rps = stream.realized_rps or rate
         probe_calls = 0
 
         def hook():
@@ -155,31 +179,38 @@ def _offered_sweep(eng, cfg, experiment: str, base_params: dict,
             probe_calls += 1
 
         t0 = time.perf_counter()
-        eng.run(reqs, idle_hook=hook)
+        eng.run(reqs, idle_hook=hook, deadline_s=run_deadline_s)
         el = time.perf_counter() - t0
         toks = sum(len(r.generated) for r in reqs)
         tps = toks / el
-        offered_tps = rate * max_new
+        offered_tps = realized_rps * max_new
         sustained = tps >= 0.9 * offered_tps
-        ttft = [r.ttft_s for r in reqs]
-        qwait = [r.queue_wait_s for r in reqs]
-        prefill = [r.prefill_s for r in reqs]
+        ttft = [v for v in (r.ttft_s for r in reqs) if v is not None]
+        qwait = [v for v in (r.queue_wait_s for r in reqs) if v is not None]
+        prefill = [v for v in (r.prefill_s for r in reqs) if v is not None]
         tok_lat = [t for r in reqs for t in r.decode_token_s]
         name = f"load_{mult:g}x"
-        level = dict(base_params, offered_mult=mult, offered_rps=rate,
+        level = dict(base_params, offered_mult=mult, requested_rps=rate,
+                     offered_rps=realized_rps,
                      offered_tokens_per_sec=offered_tps, n_requests=n,
                      completed=sum(r.done for r in reqs), wall_s=el,
-                     sustained=bool(sustained),
-                     queue_wait_p50_s=_pct(qwait, 50),
-                     queue_wait_p99_s=_pct(qwait, 99),
-                     prefill_p50_s=_pct(prefill, 50))
+                     sustained=bool(sustained))
+        if qwait:
+            level.update(queue_wait_p50_s=_pct(qwait, 50),
+                         queue_wait_p99_s=_pct(qwait, 99))
+        if prefill:
+            level.update(prefill_p50_s=_pct(prefill, 50))
         records.append(Record(experiment, name, "tokens_per_sec", tps,
                               unit="tok/s", relative=tps / cap_tps,
                               params=dict(level)))
-        records.append(Record(experiment, name, "ttft_p50_s",
-                              _pct(ttft, 50), unit="s", params=dict(level)))
-        records.append(Record(experiment, name, "ttft_p99_s",
-                              _pct(ttft, 99), unit="s", params=dict(level)))
+        if ttft:        # an overloaded level can complete nothing inside
+            #             its deadline — report completed=0, not a crash
+            records.append(Record(experiment, name, "ttft_p50_s",
+                                  _pct(ttft, 50), unit="s",
+                                  params=dict(level)))
+            records.append(Record(experiment, name, "ttft_p99_s",
+                                  _pct(ttft, 99), unit="s",
+                                  params=dict(level)))
         if tok_lat:     # max_new=1 has no decode stage, hence no TPOT rows
             records.append(Record(experiment, name, "tpot_p50_s",
                                   _pct(tok_lat, 50), unit="s",
@@ -369,6 +400,210 @@ def paged_sweep(duration: float = 0.3, arch: str = "olmo-1b",
     records += _offered_sweep(eng, cfg, EXPERIMENT_PAGED, eng_params,
                               duration, offered, prompt_lens, max_new,
                               max_requests)
+    return records
+
+
+# offered multiples for the SLO sweep: comfortable, at capacity, past the
+# knee, and deep overload (where the shed budget visibly binds)
+SLO_OFFERED_MULTS = (0.5, 1.0, 2.0, 4.0)
+# the two trace classes: interactive outranks batch; equal offered weight
+SLO_CLASSES = (("interactive", 1.0), ("batch", 1.0))
+
+# SLO targets as multiples of the run's own measured medians — attainment
+# stays host-speed independent (the same trick as the throughput
+# relatives).  Interactive is tight; batch is loose but carries a
+# queue-wait shed budget so overload sheds stale batch work instead of
+# serving it arbitrarily late.
+SLO_TARGET_FACTORS = {
+    "interactive": {"rank": 0, "ttft": 8.0, "tpot": 4.0, "shed": None},
+    "batch": {"rank": 1, "ttft": 40.0, "tpot": 16.0, "shed": 40.0},
+}
+
+
+def _slo_policy_from_measured(prefill_med: float, tpot_med: float):
+    """Per-class targets scaled off the calibration run's decomposition."""
+    from repro.serve.scheduler import ClassSLO, SLOPolicy
+    classes = {}
+    for name, f in SLO_TARGET_FACTORS.items():
+        classes[name] = ClassSLO(
+            rank=f["rank"], ttft_s=f["ttft"] * prefill_med,
+            tpot_s=f["tpot"] * tpot_med,
+            shed_after_s=None if f["shed"] is None
+            else f["shed"] * prefill_med)
+    return SLOPolicy(classes=classes, default_class="batch")
+
+
+def slo_sweep(duration: float = 0.3,
+              offered: Sequence[float] = SLO_OFFERED_MULTS,
+              arch: str = "olmo-1b", n_slots: int = 4,
+              cache_len: int = 64, block_size: int = 8,
+              max_requests: int = 24,
+              fabric_condition: str = "clean",
+              seed: int = 0) -> list[Record]:
+    """SLO-driven admission under trace-shaped load — the control loop.
+
+    Calibrates burst capacity and the prefill/TPOT medians FIFO-style,
+    derives per-class SLO targets from those medians
+    (``SLO_TARGET_FACTORS``), arms the scheduler with the policy, then
+    serves a bursty two-class trace at each offered multiple with the
+    probe kernel on the idle hook.  Per level the stream carries token
+    throughput, guarded TTFT/TPOT quantiles, shed fraction, probe
+    headroom, and one ``slo_attainment`` row per class (fraction of the
+    class's offered requests that completed inside BOTH its TTFT and
+    TPOT targets).  ``fabric_condition`` composes the degraded-fabric
+    layer in (``repro.fabric``): the straggler condition is the
+    acceptance experiment — attainment is re-measured while every decode
+    tick drags.
+    """
+    cfg = smoke(all_archs()[arch])
+    params = registry.init_params(cfg, jax.random.key(0))
+    fabric = None
+    if fabric_condition != "clean":
+        from repro.fabric import ServeFabric, canonical_conditions
+        conds = canonical_conditions()
+        if fabric_condition not in conds:
+            raise ValueError(f"unknown fabric condition "
+                             f"{fabric_condition!r}; one of {sorted(conds)}")
+        fabric = ServeFabric(conds[fabric_condition])
+    eng = ContinuousEngine(cfg, params, n_slots=n_slots,
+                           cache_len=cache_len, block_size=block_size,
+                           fabric=fabric)
+    prompt_buckets, max_new_buckets = (8, 16), (4, 8)
+    base_params = {"arch": cfg.name, "n_slots": n_slots,
+                   "cache_len": cache_len, "block_size": block_size,
+                   "kv_blocks": eng.kv.n_blocks,
+                   "prompt_len_buckets": list(prompt_buckets),
+                   "max_new_buckets": list(max_new_buckets),
+                   "fabric_condition": fabric_condition,
+                   "classes": [c for c, _ in SLO_CLASSES]}
+    run_probe, probe_flops = _make_probe()
+    records: list[Record] = []
+
+    m_idle = measure(run_probe, min(max(duration, 0.05), 0.25))
+    idle_fps = probe_flops * m_idle.calls_per_sec
+    records.append(Record(
+        EXPERIMENT_SLO, "probe_idle", "headroom_flops_per_s", idle_fps,
+        unit="flop/s", relative=1.0,
+        params=dict(base_params, probe_flops=probe_flops)))
+
+    # burst calibration, FIFO: capacity + the measured decomposition the
+    # policy targets scale from; warms every compile out of the sweep
+    max_new_cal = max(max_new_buckets)
+    cal_spec = dict(n_requests=2 * n_slots, rate_rps=0.0,
+                    prompt_lens=prompt_buckets, max_new_tokens=max_new_cal,
+                    vocab_size=cfg.vocab_size)
+    eng.generate(make_requests(LoadSpec(**cal_spec)))    # compile, untimed
+    cal = make_requests(LoadSpec(**cal_spec, seed=1))
+    t0 = time.perf_counter()
+    eng.generate(cal)
+    cal_el = time.perf_counter() - t0
+    cap_tps = sum(len(r.generated) for r in cal) / cal_el
+    cap_rps = cap_tps / max_new_cal
+    prefill_med = _pct([r.prefill_s for r in cal], 50)
+    tpot_med = _pct([t for r in cal for t in r.decode_token_s], 50)
+    records.append(Record(
+        EXPERIMENT_SLO, "capacity", "tokens_per_sec", cap_tps,
+        unit="tok/s", relative=1.0,
+        params=dict(base_params, wall_s=cal_el, requests_per_sec=cap_rps,
+                    prefill_p50_s=prefill_med, tpot_p50_s=tpot_med,
+                    mode="burst")))
+
+    policy = _slo_policy_from_measured(prefill_med, tpot_med)
+    eng.scheduler.slo = policy
+    targets = {name: {"ttft_s": c.ttft_s, "tpot_s": c.tpot_s,
+                      "shed_after_s": c.shed_after_s, "rank": c.rank}
+               for name, c in policy.classes.items()}
+
+    window = max(2 * duration, 0.4)
+    for k, mult in enumerate(offered):
+        rate = mult * cap_rps
+        n = int(min(max(rate * window, 8), max_requests))
+        stream = make_trace(TraceSpec(
+            n_requests=n, base_rps=rate, classes=SLO_CLASSES,
+            bursts=((0.25 * window, 0.25 * window, 3.0),),
+            prompt_len_buckets=prompt_buckets,
+            max_new_buckets=max_new_buckets,
+            vocab_size=cfg.vocab_size, seed=seed * 1000 + 20 + k))
+        reqs = stream.requests
+        realized_rps = stream.realized_rps or rate
+        mean_new = float(np.mean([r.max_new_tokens for r in reqs]))
+        span = reqs[-1].arrival_s if reqs else 0.0
+        probe_calls = 0
+
+        def hook():
+            nonlocal probe_calls
+            run_probe()
+            probe_calls += 1
+
+        n_preempt0 = len(eng.scheduler.preempt_log)
+        t0 = time.perf_counter()
+        # deadline: the stream's own arrival span plus a backlog-drain
+        # allowance — overload levels end bounded, comfortable ones don't
+        # get clipped
+        eng.run(reqs, idle_hook=hook, deadline_s=span + 2 * window)
+        el = time.perf_counter() - t0
+        toks = sum(len(r.generated) for r in reqs)
+        tps = toks / el
+        offered_tps = realized_rps * mean_new
+        sustained = bool(tps >= 0.9 * offered_tps)
+        shed = [r for r in reqs if r.t_shed is not None]
+        ttft = [v for v in (r.ttft_s for r in reqs) if v is not None]
+        tok_lat = [t for r in reqs for t in r.decode_token_s]
+        name = f"load_{mult:g}x"
+        level = dict(base_params, offered_mult=mult, requested_rps=rate,
+                     offered_rps=realized_rps,
+                     offered_tokens_per_sec=offered_tps, n_requests=n,
+                     completed=sum(r.done for r in reqs), wall_s=el,
+                     sustained=sustained,
+                     preemptions=len(eng.scheduler.preempt_log) - n_preempt0)
+        records.append(Record(EXPERIMENT_SLO, name, "tokens_per_sec", tps,
+                              unit="tok/s", relative=tps / cap_tps,
+                              params=dict(level)))
+        records.append(Record(EXPERIMENT_SLO, name, "shed_fraction",
+                              len(shed) / n, unit="fraction",
+                              relative=len(shed) / n,
+                              params=dict(level, shed_reasons=sorted(
+                                  {r.shed_reason for r in shed}))))
+        if ttft:
+            records.append(Record(EXPERIMENT_SLO, name, "ttft_p50_s",
+                                  _pct(ttft, 50), unit="s",
+                                  params=dict(level)))
+            records.append(Record(EXPERIMENT_SLO, name, "ttft_p99_s",
+                                  _pct(ttft, 99), unit="s",
+                                  params=dict(level)))
+        if tok_lat:
+            records.append(Record(EXPERIMENT_SLO, name, "tpot_p99_s",
+                                  _pct(tok_lat, 99), unit="s",
+                                  params=dict(level)))
+        headroom_fps = probe_calls * probe_flops / el
+        records.append(Record(
+            EXPERIMENT_SLO, name, "headroom_flops_per_s", headroom_fps,
+            unit="flop/s",
+            relative=headroom_fps / idle_fps if idle_fps else None,
+            params=dict(level, probe_calls=probe_calls)))
+        # per-class attainment — the row the planner's SLO arm gates on.
+        # Named slo_<class>_<mult>x, NOT load_*: the level loops in
+        # report.serve_table and planner headroom scans key on load_*.
+        for cname, _ in SLO_CLASSES:
+            creqs = [r for r in reqs if r.priority == cname]
+            if not creqs:
+                continue
+            cls = policy.classes[cname]
+            hits = [r for r in creqs if r.done
+                    and r.ttft_s is not None and r.ttft_s <= cls.ttft_s
+                    and (r.tpot_s is None or r.tpot_s <= cls.tpot_s)]
+            att = len(hits) / len(creqs)
+            records.append(Record(
+                EXPERIMENT_SLO, f"slo_{cname}_{mult:g}x",
+                "slo_attainment", att, unit="fraction", relative=att,
+                params=dict(level, slo_class=cname, rank=cls.rank,
+                            class_requests=len(creqs),
+                            class_completed=sum(r.done for r in creqs),
+                            class_shed=sum(
+                                r.t_shed is not None for r in creqs),
+                            class_preempt_cycles=sum(
+                                r.n_preempted for r in creqs),
+                            targets=targets[cname])))
     return records
 
 

@@ -117,6 +117,17 @@ def _serve_paged(*, duration: float) -> Iterable[Record]:
     return serving.paged_sweep(duration=duration)
 
 
+@experiment("serve.slo_sweep", classes=("CPU", "MEMORY"),
+            figure="(SLO-driven admission control loop)",
+            description="bursty two-class trace at offered-load multiples "
+                        "under SLO-driven admission (priority, preemption, "
+                        "shed): attainment per class x level, shed "
+                        "fraction, probe headroom beside the traffic")
+def _serve_slo(*, duration: float) -> Iterable[Record]:
+    from repro.core import serving
+    return serving.slo_sweep(duration=duration)
+
+
 @experiment("serve.continuous_vs_static", classes=("CPU",),
             figure="(engine comparison)",
             description="mixed-length workload: slot-admission continuous "

@@ -25,6 +25,16 @@ physical page pool (``serve/paged.py``): decode attends through the
 ragged paged-attention kernel with ``--buffer-depth`` page loads in
 flight.  Token streams are identical to the dense engine; the latency
 decomposition shows what the paging indirection costs (or saves).
+
+``--trace FILE`` replays a recorded JSONL trace (arrivals, prompts,
+generation budgets, priority classes — ``serve/loadgen.py``) instead of
+generating synthetic load; ``--save-trace FILE`` records whatever stream
+was served so a run can be re-offered verbatim.  ``--slo`` arms the
+scheduler with the ``serve_slo_targets`` runtime policy: admission goes
+priority-aware with preemption and shed, and the summary reports
+per-class SLO attainment (DESIGN.md section 15).  ``--classes`` cycles
+the given priority classes over generated requests when no trace
+supplies them.
 """
 from __future__ import annotations
 
@@ -88,6 +98,22 @@ def main():
     ap.add_argument("--devices", type=int, default=0,
                     help="fabricate N host devices (XLA flag; must be set "
                          "before jax initializes, hence a CLI flag)")
+    ap.add_argument("--trace", default="",
+                    help="replay a recorded JSONL trace file (arrivals, "
+                         "prompts, budgets, priority classes) instead of "
+                         "generating synthetic load (continuous engine "
+                         "only)")
+    ap.add_argument("--save-trace", default="",
+                    help="record the served request stream to this JSONL "
+                         "file, replayable via --trace")
+    ap.add_argument("--slo", action="store_true",
+                    help="SLO-driven admission: priority classes, "
+                         "preemption and shed per the serve_slo_targets "
+                         "runtime policy (continuous engine only)")
+    ap.add_argument("--classes", default="",
+                    help="comma-separated priority classes cycled over "
+                         "generated requests (e.g. interactive,batch); "
+                         "ignored when --trace supplies classes")
     args = ap.parse_args()
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -132,16 +158,37 @@ def main():
         ap.error(f"--paged needs --cache-len divisible by --block-size "
                  f"({args.cache_len} % {args.block_size} != 0): blocks "
                  f"are physical pool pages")
+    if args.static and (args.trace or args.slo):
+        ap.error("--trace/--slo drive the continuous engine's arrival "
+                 "pacing and admission policy; the static engine has "
+                 "neither (drop --static)")
+    if args.trace and args.classes:
+        ap.error("--classes assigns priorities to generated requests; "
+                 "a --trace already carries its own (drop one)")
+    if args.static and args.save_trace:
+        ap.error("--save-trace records the continuous engine's request "
+                 "stream (drop --static)")
 
     cfg = smoke(all_archs()[args.arch])
     params = registry.init_params(cfg, jax.random.key(0))
     prompt_lens = tuple(int(x) for x in args.prompt_lens.split(","))
 
-    from repro.serve.loadgen import LoadSpec, make_requests
+    from repro.serve.loadgen import (LoadSpec, load_trace, make_requests,
+                                     save_trace)
     spec = LoadSpec(n_requests=args.requests, rate_rps=args.rate,
                     prompt_lens=prompt_lens, max_new_tokens=args.max_new,
                     vocab_size=cfg.vocab_size, seed=args.seed,
                     arrivals=args.arrivals)
+
+    def build_requests():
+        if args.trace:
+            return load_trace(args.trace).requests
+        reqs = make_requests(spec)
+        if args.classes:
+            names = [c.strip() for c in args.classes.split(",") if c.strip()]
+            for i, r in enumerate(reqs):
+                r.priority = names[i % len(names)]
+        return reqs
 
     if args.static:
         from repro.launch.mesh import make_host_mesh
@@ -160,15 +207,22 @@ def main():
                   f"per-stage stamps)")
     else:
         from repro.serve.continuous import ContinuousEngine
+        from repro.serve.scheduler import SLOPolicy
         fabric = None
         if args.fabric != "clean":
             fabric = ServeFabric(canon[args.fabric])
+        policy = SLOPolicy.from_runtime() if args.slo else None
         eng = ContinuousEngine(cfg, params, n_slots=args.batch,
                                cache_len=args.cache_len,
                                block_size=args.block_size, fabric=fabric,
                                tp_size=args.tp_size, paged=args.paged,
-                               page_buffer_depth=args.buffer_depth)
-        reqs = make_requests(spec)
+                               page_buffer_depth=args.buffer_depth,
+                               slo=policy)
+        reqs = build_requests()
+        if args.save_trace:
+            save_trace(reqs, args.save_trace)
+            print(f"[serve] trace saved to {args.save_trace} "
+                  f"({len(reqs)} requests)")
         t0 = time.perf_counter()
         eng.run(reqs)
         elapsed = time.perf_counter() - t0
@@ -179,21 +233,45 @@ def main():
                   f"{fabric.stalled_s['decode'] * 1e3:.0f}ms into decode "
                   "ticks")
         for i, r in enumerate(reqs):
-            print(f"[serve] req {i}: prompt={len(r.prompt)} "
+            tag = f" [{r.priority}]" if (args.slo or args.trace
+                                         or args.classes) else ""
+            shed = f" SHED({r.shed_reason})" if r.t_shed is not None else ""
+            print(f"[serve] req {i}{tag}: prompt={len(r.prompt)} "
                   f"tokens={len(r.generated)} "
                   f"queue={_fmt_ms(r.queue_wait_s)} "
                   f"ttft={_fmt_ms(r.ttft_s)} "
                   f"prefill={_fmt_ms(r.prefill_s)} "
-                  f"tpot={_fmt_ms(r.tpot_s)}")
+                  f"tpot={_fmt_ms(r.tpot_s)}{shed}")
+        if policy is not None:
+            sched = eng.scheduler
+            for cname in sorted({r.priority for r in reqs}):
+                cls = policy.slo_for(cname)
+                creqs = [r for r in reqs if r.priority == cname]
+                hits = [r for r in creqs if r.done
+                        and r.ttft_s is not None and r.ttft_s <= cls.ttft_s
+                        and (r.tpot_s is None or r.tpot_s <= cls.tpot_s)]
+                print(f"[serve] class {cname}: "
+                      f"{len(hits)}/{len(creqs)} in SLO "
+                      f"(ttft<={cls.ttft_s * 1e3:.0f}ms, "
+                      f"tpot<={cls.tpot_s * 1e3:.0f}ms), "
+                      f"{sum(r.t_shed is not None for r in creqs)} shed, "
+                      f"{sum(r.n_preempted for r in creqs)} preempt "
+                      f"cycle(s)")
+            print(f"[serve] slo: {len(sched.admit_log)} admissions, "
+                  f"{len(sched.preempt_log)} preemptions, "
+                  f"{len(sched.shed_log)} shed")
     toks = sum(len(r.generated) for r in reqs)
     mode = "static" if args.static else (
         f"continuous tp={args.tp_size}" if args.tp_size > 1 else
         "continuous")
     if args.paged:
         mode += f" paged(depth={args.buffer_depth})"
+    if args.slo:
+        mode += " slo"
+    offered = "trace" if args.trace else f"{args.rate or 'burst'} req/s"
     print(f"[serve] {mode}: {len(reqs)} requests, {toks} tokens in "
           f"{elapsed:.2f}s -> {toks / elapsed:.1f} tok/s "
-          f"(offered {args.rate or 'burst'} req/s)")
+          f"(offered {offered})")
 
 
 if __name__ == "__main__":

@@ -54,6 +54,23 @@ _DEFAULT = {
     #                             offload verdict is withdrawn
     #                             (core/planner.fabric_sensitivity_assessment
     #                             consuming fabric.serve_tail records)
+    "serve_slo_targets": {      # per-class SLO targets (seconds) consumed by
+        #                         scheduler.SLOPolicy.from_runtime — the
+        #                         launch.serve --slo defaults; rank orders
+        #                         admission (lower = higher priority),
+        #                         shed_after_s is the queue-wait budget
+        #                         (DESIGN.md section 15)
+        "interactive": {"rank": 0, "ttft_s": 0.5, "tpot_s": 0.25},
+        "standard": {"rank": 1, "ttft_s": 2.0, "tpot_s": 0.5},
+        "batch": {"rank": 2, "ttft_s": 10.0, "tpot_s": 2.0,
+                  "shed_after_s": 10.0},
+    },
+    "serve_slo_attainment_min": 0.9,  # planner rule 5, SLO arm: when
+    #                             serve.slo_sweep records are present the
+    #                             offload verdict additionally requires the
+    #                             highest-priority class to attain its SLO
+    #                             at this fraction at every sustained level
+    #                             (core/planner.serve_offload_assessment)
 }
 
 _local = threading.local()

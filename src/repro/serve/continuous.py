@@ -108,7 +108,7 @@ class ContinuousEngine:
                  clock: Callable[[], float] = time.perf_counter,
                  fabric=None, mesh=None, tp_size: int = 1,
                  paged: bool = False, page_buffer_depth: int = 2,
-                 debug: bool = False):
+                 slo=None, debug: bool = False):
         # fabric: an optional repro.fabric.ServeFabric — the degraded-wire
         # enforcement point for serving.  Its stall_admit runs before each
         # admitted prefill (TTFT inflates, queue_wait does not) and
@@ -121,6 +121,11 @@ class ContinuousEngine:
         # mesh / tp_size: tensor-parallel decode.  ``tp_size=N`` builds a
         # (1, N) ("data", "model") mesh over the visible devices; an
         # explicit ``mesh=`` wins when given.
+        #
+        # slo: an optional scheduler.SLOPolicy — admission goes
+        # priority-aware with shed + preemption (DESIGN.md section 15).
+        # None keeps exact FIFO.  Swappable between runs via
+        # ``engine.scheduler.slo``.
         #
         # paged / page_buffer_depth: physical paged-KV serving (module
         # docstring).  debug=True re-checks the allocator invariants on
@@ -161,7 +166,7 @@ class ContinuousEngine:
         self.kv = KVBlockAllocator(n_blocks=kv_blocks,
                                    block_size=block_size,
                                    n_shards=self.tp_size)
-        self.scheduler = SlotScheduler(n_slots, self.kv)
+        self.scheduler = SlotScheduler(n_slots, self.kv, slo=slo)
         if prefill_per_step is None:
             prefill_per_step = int(runtime.policy()["serve_prefill_per_step"])
         self.prefill_per_step = max(1, prefill_per_step)
@@ -202,8 +207,19 @@ class ContinuousEngine:
     # -- engine steps ------------------------------------------------------
 
     def _admit_one(self, now: float) -> Optional[int]:
-        """Admit + prefill the head-of-queue request, if admissible."""
+        """Admit + prefill the scheduler's next pick, if admissible.
+
+        An SLO admission may preempt active slots to make room: each
+        victim's slot is reset here (token/index zeroed; paged tables
+        re-pointed at the trash page) BEFORE the new prefill lands — the
+        victim's pages went back to the pool, and its old slot may stay
+        free while the candidate lands elsewhere, so without the reset
+        its garbage decode could scribble a page the pool re-issued.
+        """
+        n_preempt = len(self.scheduler.preempt_log)
         adm = self.scheduler.admit(now)
+        for _, vacated in self.scheduler.preempt_log[n_preempt:]:
+            self._reset_slot(vacated)
         if adm is None:
             return None
         slot, req = adm
@@ -288,7 +304,8 @@ class ContinuousEngine:
     # -- run loop ----------------------------------------------------------
 
     def run(self, requests: list[ServeRequest],
-            idle_hook: Optional[Callable[[], None]] = None
+            idle_hook: Optional[Callable[[], None]] = None,
+            deadline_s: Optional[float] = None
             ) -> list[ServeRequest]:
         """Serve ``requests`` (with ``arrival_s`` offsets) to completion.
 
@@ -301,6 +318,12 @@ class ContinuousEngine:
         — idle iterations are counted in ``idle_iters``, not logged); the
         loop ends when every submitted request is done.  Returns
         ``requests`` in the order given.
+
+        ``deadline_s`` bounds the run on the engine clock: at the
+        deadline every unfinished request — queued, active, or not yet
+        arrived — is shed with reason "deadline" (pages released, slots
+        reset), which keeps overload levels of the sweeps from running
+        arbitrarily past their measurement window.
         """
         if self.scheduler.n_active or self.scheduler.pending:
             raise RuntimeError(
@@ -315,6 +338,13 @@ class ContinuousEngine:
         self._t0 = self.clock()
         while n_seen < len(arrivals) or self.scheduler.has_work:
             now = self.clock() - self._t0
+            if deadline_s is not None and now >= deadline_s:
+                for slot in self.scheduler.abort(now, reason="deadline"):
+                    self._reset_slot(slot)
+                for r in arrivals[n_seen:]:     # never even arrived
+                    r.t_shed, r.shed_reason = now, "deadline"
+                n_seen = len(arrivals)
+                break
             while n_seen < len(arrivals) \
                     and arrivals[n_seen].arrival_s <= now:
                 self.scheduler.submit(arrivals[n_seen], now)

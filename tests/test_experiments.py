@@ -480,3 +480,63 @@ def test_planner_serve_offload_rule():
     sat = [hr("load_2x", 9e9, sustained=False)]
     assert not planner.serve_offload_assessment(
         sat, min_headroom_flops=1e9)["profitable"]
+
+
+def test_planner_serve_offload_slo_arm():
+    """Rule 5, SLO arm: with ``serve.slo_sweep`` attainment rows in the
+    stream, the highest-priority class must also make its SLO at every
+    sustained level — probe headroom beside traffic that misses its
+    targets is not sellable."""
+    from repro import runtime
+
+    def hr(name, flops, sustained=True):
+        return Record("serve.slo_sweep", name, "headroom_flops_per_s",
+                      flops, unit="flop/s",
+                      params={"sustained": sustained})
+
+    def att(name, v, rank, cls, sustained=True):
+        return Record("serve.slo_sweep", name, "slo_attainment", v,
+                      unit="fraction",
+                      params={"rank": rank, "slo_class": cls,
+                              "sustained": sustained})
+
+    head = [hr("probe_idle", 20e9), hr("load_1x", 5e9),
+            hr("load_4x", 4e9, sustained=False)]
+    good = head + [att("slo_interactive_1x", 0.95, 0, "interactive"),
+                   att("slo_batch_1x", 0.2, 1, "batch"),  # never gates
+                   att("slo_interactive_4x", 0.1, 0, "interactive",
+                       sustained=False)]  # saturated level excluded
+    a = planner.serve_offload_assessment(good, min_headroom_flops=1e9)
+    assert a["profitable"] and a["slo_ok"] is True
+    assert a["slo_class"] == "interactive"
+    assert a["worst_slo_attainment"] == 0.95
+    assert a["slo_levels"] == {"slo_interactive_1x": 0.95}
+
+    # the top class missing its SLO at a sustained level vetoes the
+    # headroom verdict outright
+    bad = head + [att("slo_interactive_1x", 0.5, 0, "interactive")]
+    b = planner.serve_offload_assessment(bad, min_headroom_flops=1e9)
+    assert b["slo_ok"] is False and not b["profitable"]
+    assert b["worst_headroom_flops"] == 5e9  # headroom alone had cleared
+
+    # no sustained attainment evidence -> tri-state None, verdict
+    # falls back to the headroom floor alone
+    none = head + [att("slo_interactive_4x", 0.1, 0, "interactive",
+                       sustained=False)]
+    c = planner.serve_offload_assessment(none, min_headroom_flops=1e9)
+    assert c["slo_ok"] is None and c["profitable"]
+
+    # through make_plan: the note names the arm and the class, and the
+    # floor comes from the serve_slo_attainment_min policy knob
+    terms = RooflineTerms(0.01, 0.004, 0.02)
+    plan = planner.make_plan(terms, [], serve_records=bad)
+    assert plan.serve_offload is False
+    assert any("SLO arm FAILED" in n and "interactive" in n
+               for n in plan.notes)
+    assert any("offload withheld" in n for n in plan.notes)
+    ok_plan = planner.make_plan(terms, [], serve_records=good)
+    assert ok_plan.serve_offload is True
+    assert any("SLO arm OK" in n for n in ok_plan.notes)
+    with runtime.use_policy(serve_slo_attainment_min=0.99):
+        strict = planner.make_plan(terms, [], serve_records=good)
+    assert strict.serve_offload is False

@@ -66,3 +66,113 @@ def test_seed_and_spec_actually_matter():
     assert any((a.prompt.shape != b.prompt.shape)
                or (a.prompt != b.prompt).any()
                for a, b in zip(base, other))
+
+
+# ---------------------------------------------------------------------------
+# spec validation and the realized offered rate (DESIGN.md section 15)
+# ---------------------------------------------------------------------------
+
+def test_loadspec_validation():
+    import pytest
+    with pytest.raises(ValueError, match="n_requests"):
+        _spec(n_requests=0)
+    with pytest.raises(ValueError, match="rate_rps"):
+        _spec(rate_rps=-1.0)
+    with pytest.raises(ValueError, match="prompt_lens"):
+        _spec(prompt_lens=())
+    with pytest.raises(ValueError, match="prompt_lens"):
+        _spec(prompt_lens=(8, 0))
+    with pytest.raises(ValueError, match="arrivals"):
+        _spec(arrivals="pareto")
+
+
+def test_realized_rate_is_the_streams_own_span():
+    """The sweep's honest denominator: (n-1) arrivals per measured span.
+    Uniform streams realize the requested rate exactly; a Poisson draw
+    realizes what it spans (the old ``cumsum(gaps) - gaps[0]`` convention
+    dropped the first gap and biased short streams hot); a burst has no
+    span at all."""
+    import pytest
+    from repro.serve.loadgen import make_stream
+    uni = make_stream(_spec(arrivals="uniform", rate_rps=5.0))
+    assert uni.realized_rps == pytest.approx(5.0, rel=1e-9)
+    assert uni.requested_rps == 5.0
+    poi = make_stream(_spec(arrivals="poisson", rate_rps=5.0,
+                            n_requests=64))
+    offs = [r.arrival_s for r in poi]
+    assert poi.realized_rps == pytest.approx(
+        (len(offs) - 1) / (offs[-1] - offs[0]), rel=1e-9)
+    assert poi.realized_rps != 5.0          # a draw, not the request
+    burst = make_stream(_spec(rate_rps=0.0))
+    assert burst.realized_rps == 0.0
+    single = make_stream(_spec(n_requests=1, rate_rps=5.0))
+    assert single.realized_rps == 0.0       # no span from one arrival
+
+
+# ---------------------------------------------------------------------------
+# trace-shaped load
+# ---------------------------------------------------------------------------
+
+def _trace(**kw):
+    from repro.serve.loadgen import TraceSpec
+    base = dict(n_requests=32, base_rps=20.0,
+                classes=(("interactive", 1.0), ("batch", 3.0)),
+                bursts=((0.2, 0.3, 4.0),), seed=5)
+    base.update(kw)
+    return TraceSpec(**base)
+
+
+def test_trace_deterministic_sorted_and_bucketed():
+    from repro.serve.loadgen import make_trace
+    a, b = make_trace(_trace()), make_trace(_trace())
+    assert [r.arrival_s for r in a] == [r.arrival_s for r in b]
+    assert [r.priority for r in a] == [r.priority for r in b]
+    for ra, rb in zip(a, b):
+        assert (ra.prompt == rb.prompt).all()
+    offs = [r.arrival_s for r in a]
+    assert offs == sorted(offs) and offs[0] == 0.0
+    spec = _trace()
+    # heavy-tailed lengths land exactly on the compile-bounding grids
+    assert {len(r.prompt) for r in a} <= set(spec.prompt_len_buckets)
+    assert {r.max_new_tokens for r in a} <= set(spec.max_new_buckets)
+    # both weighted classes are drawn, nothing else
+    assert {r.priority for r in a} == {"interactive", "batch"}
+    assert make_trace(_trace(seed=6)).requests[0].arrival_s == 0.0
+
+
+def test_trace_rate_modulation_and_validation():
+    import pytest
+    spec = _trace(bursts=((1.0, 2.0, 3.0),), ramp=(0.0, 10.0, 2.0))
+    assert spec.rate_mult(0.5) < spec.rate_mult(1.5)    # inside the burst
+    assert spec.rate_mult(20.0) == 2.0                  # ramp done, no burst
+    assert spec.peak_rps == spec.base_rps * 3.0 * 2.0
+    with pytest.raises(ValueError, match="base_rps"):
+        _trace(base_rps=0.0)
+    with pytest.raises(ValueError, match="weights"):
+        _trace(classes=(("a", 0.0),))
+    with pytest.raises(ValueError, match="burst"):
+        _trace(bursts=((0.0, -1.0, 2.0),))
+    with pytest.raises(ValueError, match="bucket"):
+        _trace(prompt_len_buckets=())
+
+
+def test_trace_roundtrips_through_jsonl(tmp_path):
+    import pytest
+    from repro.serve.loadgen import load_trace, make_trace, save_trace
+    stream = make_trace(_trace(n_requests=12))
+    path = tmp_path / "trace.jsonl"
+    save_trace(stream.requests, path)
+    back = load_trace(path)
+    assert len(back) == 12
+    assert back.params["arrivals"] == "replay"
+    assert back.realized_rps == pytest.approx(stream.realized_rps)
+    for a, b in zip(stream, back):
+        assert (a.prompt == b.prompt).all()
+        assert a.arrival_s == pytest.approx(b.arrival_s)
+        assert (a.max_new_tokens, a.priority) == (b.max_new_tokens,
+                                                  b.priority)
+        # replay requests are fresh: no stamps carried over
+        assert b.t_enqueue is None and b.state == "queued"
+    with pytest.raises(ValueError, match="empty trace"):
+        (tmp_path / "none.jsonl").write_text("\n")
+        load_trace(tmp_path / "none.jsonl")

@@ -15,7 +15,8 @@ pytest.importorskip("hypothesis",
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.serve.kv import KVBlockAllocator, blocks_for  # noqa: E402
-from repro.serve.scheduler import ServeRequest, SlotScheduler  # noqa: E402
+from repro.serve.scheduler import (ClassSLO, ServeRequest,  # noqa: E402
+                                   SLOPolicy, SlotScheduler)
 
 settings.register_profile("ci-serve", max_examples=40, deadline=None)
 settings.load_profile("ci-serve")
@@ -122,6 +123,33 @@ def test_page_spans_partition_and_recycle(n_blocks, block_size, sizes, data):
         kv.release(rid)
     assert sorted(kv._free) == list(range(n_blocks))
     assert kv.free_table_row(max_pages) == [kv.trash_page] * max_pages
+
+
+# ---------------------------------------------------------------------------
+# latency stamps on a virtual clock
+# ---------------------------------------------------------------------------
+
+def test_submit_ahead_of_arrival_stamps_at_arrival():
+    """Regression: a request submitted BEFORE its offered arrival
+    (arrival_s > now — e.g. a whole trace submitted up front) used to be
+    stamped ``t_enqueue = now``, so its queue wait and TTFT accrued time
+    during which it nominally did not exist yet.  The stamp must sit at
+    the offered arrival, and admission must not run ahead of it either."""
+    kv = KVBlockAllocator(n_blocks=8, block_size=4)
+    sched = SlotScheduler(2, kv)
+    req = ServeRequest(prompt=np.zeros(4, np.int32), max_new_tokens=2,
+                       arrival_s=5.0)
+    sched.submit(req, now=2.0)              # virtual clock at 2.0
+    assert req.t_enqueue == 5.0             # pre-fix: 2.0
+    assert sched.admit(4.9) is None         # not arrived yet
+    adm = sched.admit(6.0)
+    assert adm is not None and adm[1] is req
+    assert req.queue_wait_s == 1.0          # pre-fix: 4.0
+    # a late-noticed request still stamps at its (past) arrival
+    late = ServeRequest(prompt=np.zeros(4, np.int32), max_new_tokens=2,
+                        arrival_s=1.0)
+    sched.submit(late, now=3.0)
+    assert late.t_enqueue == 1.0
 
 
 # ---------------------------------------------------------------------------
@@ -258,3 +286,134 @@ def test_placement_partitions_each_block(n_blocks, block_size, n_tokens,
         assert all(a[1] == b[0] for a, b in zip(segs, segs[1:])), segs
     # the default frame and an explicit override agree
     assert kv.placement(0, cache_len) == kv.placement(0, cache_len, n_shards)
+
+
+# ---------------------------------------------------------------------------
+# SLO lifecycle: preempt + shed as first-class outcomes
+# ---------------------------------------------------------------------------
+
+def _slo_policy():
+    # tight interactive TTFT so preemption arms under contention; a batch
+    # queue-wait budget small enough that overload sheds within a sweep
+    return SLOPolicy(classes={
+        "interactive": ClassSLO(rank=0, ttft_s=3.0, tpot_s=100.0),
+        "batch": ClassSLO(rank=1, ttft_s=50.0, tpot_s=100.0,
+                          shed_after_s=12.0)},
+        default_class="batch")
+
+
+slo_req_strategy = st.tuples(st.integers(1, 12),    # prompt length
+                             st.integers(1, 8),     # max_new_tokens
+                             st.integers(0, 20),    # arrival step
+                             st.sampled_from(["interactive", "batch"]))
+
+
+def _drive_slo(n_slots, n_blocks, block_size, specs, n_shards=1):
+    """``_drive`` with the scheduler SLO-armed: admission may preempt
+    (victim re-queues, its simulated progress restarts) or shed.  Every
+    request must reach a terminal state — done or shed — with the pool
+    fully recycled."""
+    kv = KVBlockAllocator(n_blocks=n_blocks, block_size=block_size,
+                          n_shards=n_shards)
+    sched = SlotScheduler(n_slots, kv, slo=_slo_policy())
+    reqs = [ServeRequest(prompt=np.zeros(p, np.int32), max_new_tokens=m,
+                         arrival_s=float(a), priority=c)
+            for p, m, a, c in specs
+            if blocks_for(p + m, block_size) <= n_blocks]
+    arrivals = sorted(reqs, key=lambda r: (r.arrival_s, len(r.prompt)))
+    seen, t, iters = 0, 0.0, 0
+    while seen < len(arrivals) or sched.has_work:
+        iters += 1
+        assert iters < 10_000, "scheduler stopped making progress"
+        t += 1.0
+        while seen < len(arrivals) and arrivals[seen].arrival_s <= t:
+            sched.submit(arrivals[seen], t)
+            seen += 1
+        adm = sched.admit(t)
+        if adm is not None:
+            slot, req = adm
+            req.generated.append(0)            # prefill's first token
+            req.t_first_token = t
+            if len(req.generated) >= req.max_new_tokens:
+                sched.complete(slot, t)
+        for slot, req in sched.active():
+            req.generated.append(1)
+            req.decode_token_s.append(1.0)
+            if len(req.generated) >= req.max_new_tokens:
+                sched.complete(slot, t)
+        sched.check()
+    return reqs, kv, sched
+
+
+@given(st.integers(1, 4), st.integers(2, 24), st.integers(1, 4),
+       st.lists(slo_req_strategy, min_size=1, max_size=12))
+def test_slo_no_request_lost(n_slots, n_blocks, block_size, specs):
+    """Across any preempt/re-admit/shed interleaving: every request ends
+    in exactly one terminal state, a done request carries its full token
+    budget (the restart re-ran prefill), and nothing is left queued or
+    holding a slot."""
+    reqs, _, sched = _drive_slo(n_slots, n_blocks, block_size, specs)
+    for r in reqs:
+        assert (r.done, r.t_shed is not None) in ((True, False),
+                                                  (False, True)), r.state
+        if r.done:
+            assert len(r.generated) == r.max_new_tokens
+    assert sched.n_active == 0 and not sched.pending
+
+
+@given(st.integers(1, 4), st.integers(2, 24), st.integers(1, 4),
+       st.lists(slo_req_strategy, min_size=1, max_size=12))
+def test_slo_stamps_monotone(n_slots, n_blocks, block_size, specs):
+    """Stamps stay ordered through preemption cycles: ``t_enqueue`` is
+    preserved (queue wait honest across restarts), the final admission
+    sits at or after it, and a preempted-then-completed request's TTFT
+    covers the whole saga."""
+    reqs, _, _ = _drive_slo(n_slots, n_blocks, block_size, specs)
+    for r in reqs:
+        assert r.t_enqueue == r.arrival_s
+        if r.done:
+            assert r.t_enqueue <= r.t_admit <= r.t_first_token <= r.t_done
+            assert r.queue_wait_s >= 0 and r.ttft_s >= 0
+        else:
+            assert r.t_shed is not None and r.t_shed >= r.t_enqueue
+            assert r.shed_reason == "slo_budget"
+
+
+@given(st.integers(1, 4), st.integers(2, 24), st.integers(1, 4),
+       st.lists(slo_req_strategy, min_size=1, max_size=12))
+def test_slo_shed_once_and_pool_restored(n_slots, n_blocks, block_size,
+                                         specs):
+    """A shed is recorded exactly once per request (log matches stamps,
+    no double entries), preempt cycles are counted, and the KV pool is
+    fully recycled after any interleaving."""
+    reqs, kv, sched = _drive_slo(n_slots, n_blocks, block_size, specs)
+    shed_rids = [rid for rid, _ in sched.shed_log]
+    assert len(shed_rids) == len(set(shed_rids))
+    assert sorted(shed_rids) == sorted(
+        r.rid for r in reqs if r.t_shed is not None)
+    assert sum(r.n_preempted for r in reqs) == len(sched.preempt_log)
+    assert kv.n_free == kv.n_blocks
+
+
+@given(st.integers(1, 4), st.integers(2, 24), st.integers(1, 4),
+       st.lists(slo_req_strategy, min_size=1, max_size=12))
+def test_slo_decisions_blind_to_shard_count(n_slots, n_blocks, block_size,
+                                            specs):
+    """The SLO decision set — admissions, preemptions, sheds, stamps —
+    is identical at shard counts 1/2/4, like FIFO's: priority admission
+    still accounts in logical positions only."""
+    runs = {n: _drive_slo(n_slots, n_blocks, block_size, specs, n_shards=n)
+            for n in (1, 2, 4)}
+    base_reqs, _, base_sched = runs[1]
+    base = [(r.rid, r.t_enqueue, r.t_admit, r.t_first_token, r.t_done,
+             r.t_shed, r.n_preempted, tuple(r.generated))
+            for r in base_reqs]
+    for n in (2, 4):
+        reqs, kv, sched = runs[n]
+        assert kv.n_shards == n
+        assert sched.admit_log == base_sched.admit_log
+        assert sched.preempt_log == base_sched.preempt_log
+        assert sched.shed_log == base_sched.shed_log
+        assert [(r.rid, r.t_enqueue, r.t_admit, r.t_first_token, r.t_done,
+                 r.t_shed, r.n_preempted, tuple(r.generated))
+                for r in reqs] == base

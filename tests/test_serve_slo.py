@@ -1,0 +1,246 @@
+"""SLO-driven admission control loop (DESIGN.md section 15) and the two
+sweep bugfixes it rode in with.
+
+The acceptance differential lives here: under a two-class burst the
+SLO-armed scheduler strictly improves the high-priority class's TTFT
+attainment over FIFO on the same stream, records what it shed, and keeps
+every unshed token stream bit-identical to the FIFO replay (greedy
+decode restarts exactly after a preemption).  Plus the two regressions:
+``SlotScheduler.submit`` must stamp ``t_enqueue`` at the offered
+``arrival_s`` even for submits ahead of arrival, and ``_offered_sweep``
+must report an overloaded level that completes nothing as ``completed=0``
+rows rather than crash in ``np.percentile([])``.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import all_archs, smoke
+from repro.models import registry
+from repro.serve.kv import KVBlockAllocator
+from repro.serve.scheduler import (ClassSLO, ServeRequest, SlotScheduler,
+                                   SLOPolicy)
+
+
+@pytest.fixture(scope="module")
+def cfg_params():
+    c = smoke(all_archs()["olmo-1b"])
+    return c, registry.init_params(c, jax.random.key(0))
+
+
+def _vclock():
+    tick = {"t": 0.0}
+
+    def clock():
+        tick["t"] += 1.0
+        return tick["t"]
+    return clock
+
+
+def _req(plen=4, max_new=2, arrival=0.0, priority="standard", salt=0):
+    return ServeRequest(prompt=(np.arange(plen, dtype=np.int32) + salt),
+                        max_new_tokens=max_new, arrival_s=arrival,
+                        priority=priority)
+
+
+# ---------------------------------------------------------------------------
+# bugfix 1: latency stamps for ahead-of-arrival submits
+# ---------------------------------------------------------------------------
+
+def test_submit_ahead_of_arrival_stamps_at_arrival():
+    """A request submitted before its offered arrival time must not start
+    accruing queue wait at the loop iteration that enqueued it: t_enqueue
+    is the arrival stamp (pre-fix: ``submit`` stamped ``now`` for future
+    arrivals, so every sweep's queue-wait decomposition inflated by the
+    submit-ahead interval)."""
+    sched = SlotScheduler(2, KVBlockAllocator(n_blocks=8, block_size=4))
+    r = _req(arrival=5.0)
+    sched.submit(r, now=2.0)               # the engine notices it early
+    assert r.t_enqueue == 5.0              # pre-fix: 2.0
+    # ... and it must not be admitted before it nominally exists
+    assert sched.admit(4.9) is None
+    slot, got = sched.admit(6.0)
+    assert got is r and r.queue_wait_s == 1.0
+    # a late-noticed past arrival keeps its arrival stamp too
+    r2 = _req(arrival=1.0, salt=7)
+    sched.submit(r2, now=3.0)
+    assert r2.t_enqueue == 1.0
+    sched.check()
+
+
+# ---------------------------------------------------------------------------
+# the acceptance differential: SLO admission vs FIFO on the same burst
+# ---------------------------------------------------------------------------
+
+def _burst_scenario(c):
+    """Four long batch requests land at t=0 and fill both slots; two
+    short interactive ones arrive mid-decode.  FIFO makes them wait for
+    a batch drain; the SLO policy preempts for them."""
+    base = np.arange(8, dtype=np.int32) % c.vocab_size
+    reqs = [ServeRequest(prompt=(base + i) % c.vocab_size,
+                         max_new_tokens=12, arrival_s=0.0,
+                         priority="batch") for i in range(4)]
+    reqs += [ServeRequest(prompt=(base + 10 + i) % c.vocab_size,
+                          max_new_tokens=4, arrival_s=3.0 + i,
+                          priority="interactive") for i in range(2)]
+    return reqs
+
+
+def _burst_policy():
+    return SLOPolicy(classes={
+        "interactive": ClassSLO(rank=0, ttft_s=6.0, tpot_s=50.0),
+        "batch": ClassSLO(rank=1, ttft_s=500.0, tpot_s=500.0,
+                          shed_after_s=200.0),
+    }, default_class="batch")
+
+
+def test_slo_admission_beats_fifo_on_high_priority(cfg_params):
+    from repro.serve.continuous import ContinuousEngine
+    c, params = cfg_params
+
+    fifo_reqs = _burst_scenario(c)
+    fifo_eng = ContinuousEngine(c, params, n_slots=2, cache_len=32,
+                                block_size=4, clock=_vclock())
+    fifo_eng.run(fifo_reqs)
+
+    slo_reqs = _burst_scenario(c)
+    policy = _burst_policy()
+    slo_eng = ContinuousEngine(c, params, n_slots=2, cache_len=32,
+                               block_size=4, clock=_vclock(), slo=policy)
+    slo_eng.run(slo_reqs)
+
+    def ttfts(reqs):
+        return sorted(r.ttft_s for r in reqs
+                      if r.priority == "interactive" and r.done)
+
+    # everything completes in both runs (the shed budget is far away)
+    assert all(r.done for r in fifo_reqs) and all(r.done for r in slo_reqs)
+    assert len(slo_eng.scheduler.shed_log) == 0
+    # preemption is what bought the improvement, and it is on the record
+    assert slo_eng.scheduler.preempt_log
+    assert sum(r.n_preempted for r in slo_reqs) \
+        == len(slo_eng.scheduler.preempt_log)
+    # strict TTFT improvement for the high-priority class ...
+    assert max(ttfts(slo_reqs)) < min(ttfts(fifo_reqs))
+    # ... that strictly improves SLO attainment for the class
+    tgt = policy.classes["interactive"].ttft_s
+    fifo_hits = sum(t <= tgt for t in ttfts(fifo_reqs))
+    slo_hits = sum(t <= tgt for t in ttfts(slo_reqs))
+    assert fifo_hits == 0 and slo_hits > fifo_hits
+    # unshed token streams are bit-identical to the FIFO replay: greedy
+    # decode restarts exactly after a preemption
+    for a, b in zip(fifo_reqs, slo_reqs):
+        assert a.generated == b.generated
+        assert len(b.generated) == b.max_new_tokens
+    # stamps stay coherent through preempt/re-admit cycles
+    for r in slo_reqs:
+        assert r.t_enqueue <= r.t_admit <= r.t_first_token <= r.t_done
+    # pool and slots fully restored
+    slo_eng.scheduler.check()
+    assert slo_eng.kv.n_free == slo_eng.kv.n_blocks
+    assert slo_eng.scheduler.n_active == 0
+
+
+def test_slo_deadline_sheds_and_engine_is_reusable(cfg_params):
+    """A deadline-bounded run sheds everything unfinished (reason
+    ``deadline``), restores the pool, and leaves the engine reusable —
+    the mechanism behind overload levels in the sweeps."""
+    from repro.serve.continuous import ContinuousEngine
+    c, params = cfg_params
+    reqs = _burst_scenario(c)
+    eng = ContinuousEngine(c, params, n_slots=2, cache_len=32,
+                           block_size=4, clock=_vclock(),
+                           slo=_burst_policy())
+    eng.run(reqs, deadline_s=10.0)
+    for r in reqs:
+        assert r.state in ("done", "shed")
+    shed = [r for r in reqs if r.state == "shed"]
+    assert shed and all(r.shed_reason == "deadline" for r in shed)
+    assert all(r.t_shed is not None for r in shed)
+    assert eng.kv.n_free == eng.kv.n_blocks
+    eng.scheduler.check()
+    # the engine serves again after a deadline abort
+    again = [_req(plen=8, max_new=2, priority="interactive", salt=3)]
+    eng.run(again)
+    assert again[0].done and len(again[0].generated) == 2
+
+
+# ---------------------------------------------------------------------------
+# bugfix 2: the sweep survives a level that completes nothing
+# ---------------------------------------------------------------------------
+
+def test_offered_sweep_overload_reports_zero_completions(cfg_params):
+    """An overloaded level whose deadline expires before any completion
+    must emit ``completed=0`` throughput/shed rows with no percentile
+    rows — pre-fix ``_offered_sweep`` called ``np.percentile`` on the
+    empty TTFT pool and crashed the whole sweep."""
+    from repro.core.serving import _offered_sweep
+    from repro.serve.continuous import ContinuousEngine
+    c, params = cfg_params
+    eng = ContinuousEngine(c, params, n_slots=2, cache_len=32,
+                           block_size=8)
+    recs = _offered_sweep(eng, c, "serve.load_sweep", {"arch": c.name},
+                          duration=0.0, offered=(4.0,), prompt_lens=(8,),
+                          max_new=2, max_requests=4,
+                          run_deadline_s=0.0)    # expires at the first step
+    assert not any(r.error for r in recs)
+    lvl = {r.metric: r for r in recs if r.name == "load_4x"}
+    assert lvl["tokens_per_sec"].value == 0.0
+    assert lvl["tokens_per_sec"].params["completed"] == 0
+    assert not lvl["tokens_per_sec"].params["sustained"]
+    # no percentile rows from empty pools, headroom row still present
+    assert "ttft_p50_s" not in lvl and "tpot_p50_s" not in lvl
+    assert "headroom_flops_per_s" in lvl
+
+
+# ---------------------------------------------------------------------------
+# the serve.slo_sweep stream and its renderer
+# ---------------------------------------------------------------------------
+
+def test_slo_sweep_emits_attainment_shed_and_table():
+    from repro.analysis.report import serve_table
+    from repro.core import serving
+    recs = serving.slo_sweep(duration=0.02, offered=(0.5, 4.0))
+    assert not any(r.error for r in recs)
+    by_metric = {}
+    for r in recs:
+        by_metric.setdefault(r.metric, []).append(r)
+    # one attainment row per (class, level), named off the load_* grid
+    att = by_metric["slo_attainment"]
+    names = {r.name for r in att}
+    assert {"slo_interactive_0.5x", "slo_batch_0.5x",
+            "slo_interactive_4x", "slo_batch_4x"} <= names
+    for r in att:
+        assert 0.0 <= r.value <= 1.0
+        assert not r.name.startswith("load_")
+        assert r.params["class_requests"] >= 1
+        assert {"ttft_s", "tpot_s", "rank"} <= set(r.params["targets"])
+    # shed fraction per level, with the reasons on the record
+    shed = {r.name: r for r in by_metric["shed_fraction"]}
+    assert {"load_0.5x", "load_4x"} <= set(shed)
+    assert all(0.0 <= r.value <= 1.0 for r in shed.values())
+    # throughput + headroom per level; capacity carries the measured
+    # decomposition the policy targets were scaled from
+    cap = [r for r in by_metric["tokens_per_sec"] if r.name == "capacity"]
+    assert cap and cap[0].params["prefill_p50_s"] > 0.0
+    hr_names = {r.name for r in by_metric["headroom_flops_per_s"]}
+    assert {"probe_idle", "load_0.5x", "load_4x"} <= hr_names
+    # the renderer shows both blocks
+    tbl = serve_table(recs)
+    assert "load_0.5x slo" in tbl and "class level" in tbl
+    assert "interactive" in tbl
+
+
+def test_slo_sweep_composes_with_degraded_fabric():
+    """The straggler acceptance experiment: the same control loop runs
+    with every decode tick dragged by the degraded-fabric layer, and the
+    stream says so."""
+    from repro.core import serving
+    recs = serving.slo_sweep(duration=0.0, offered=(1.0,),
+                             fabric_condition="straggler", max_requests=8)
+    assert not any(r.error for r in recs)
+    assert all(r.params["fabric_condition"] == "straggler" for r in recs)
+    assert any(r.metric == "slo_attainment" for r in recs)
+    with pytest.raises(ValueError, match="unknown fabric condition"):
+        serving.slo_sweep(duration=0.0, offered=(),
+                          fabric_condition="no-such-wire")
