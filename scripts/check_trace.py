@@ -1,0 +1,57 @@
+#!/usr/bin/env python
+"""Validate a Chrome-trace-event JSON file produced by ``repro.obs``.
+
+Run from the repo root (CI does, on the serve.timeline smoke artifact):
+
+    PYTHONPATH=src python scripts/check_trace.py trace.json \
+        [--require CAT ...]
+
+Checks the envelope shape, event phases, per-track timestamp
+monotonicity and B/E span pairing (``repro.obs.validate``), and — with
+``--require CAT`` (repeatable) — that at least one event carries each
+named category.  The category check is what makes the CI smoke
+meaningful: a refactor that silently drops the scheduler or per-slot
+instrumentation still produces a *valid* trace, but not one with a
+``scheduler`` or ``slot`` track in it.
+
+Exit status: 0 clean, 1 problems found, 2 unreadable input.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs import validate_chrome_trace
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python scripts/check_trace.py",
+        description="Validate a repro.obs Chrome-trace-event JSON file.")
+    ap.add_argument("trace", help="path to the trace JSON")
+    ap.add_argument("--require", action="append", default=[], metavar="CAT",
+                    help="require at least one event of category CAT "
+                         "(repeatable)")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.trace) as fh:
+            data = json.load(fh)
+    except (OSError, ValueError) as e:
+        print(f"check_trace: cannot read {args.trace}: {e}", file=sys.stderr)
+        return 2
+    problems = validate_chrome_trace(
+        data, require_categories=tuple(args.require))
+    for p in problems:
+        print(f"check_trace: {p}", file=sys.stderr)
+    events = data.get("traceEvents", [])
+    cats = sorted({e.get("cat") for e in events
+                   if isinstance(e, dict) and e.get("cat")})
+    print(f"check_trace: {args.trace}: {len(events)} events, "
+          f"categories: {', '.join(cats) or '(none)'}, "
+          f"{len(problems)} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

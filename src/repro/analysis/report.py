@@ -153,6 +153,82 @@ def serve_table(records: Iterable[Record]) -> str:
     return "\n".join(out)
 
 
+TIMELINE_EXPERIMENT = "serve.timeline"
+
+
+def timeline_table(records: Iterable[Record]) -> str:
+    """Span-time decomposition view of a ``serve.timeline`` Record stream.
+
+    One row per offered-load level: throughput beside the fraction of
+    engine wall time spent in each phase span (admit / prefill / decode /
+    idle / fabric_stall), read off the ``span_time_s`` rows the
+    experiment derives from its own trace.  The phase fractions are the
+    trace *telling on* the engine: an overloaded level shows idle
+    collapsing to zero while admit+decode saturate; a degraded-fabric
+    level shows the stall column absorbing the difference.
+    """
+    by_level: dict[str, dict] = {}
+    summary = None
+    for r in records:
+        if r.experiment != TIMELINE_EXPERIMENT or r.skipped or r.error:
+            continue
+        if r.metric == "trace_events":
+            summary = r
+            continue
+        if not r.name.startswith("load_"):
+            continue
+        # level names carry dots (``load_0.5x``); phase names do not, so
+        # split span rows (``load_0.5x.idle``) on the LAST dot and key
+        # throughput rows by their whole name
+        if r.metric == "span_time_s":
+            level, _, phase = r.name.rpartition(".")
+            if not level:
+                continue
+            d = by_level.setdefault(level, {"params": {}, "phases": {}})
+            d["phases"][phase] = r
+        elif r.metric == "tokens_per_sec":
+            d = by_level.setdefault(r.name, {"params": {}, "phases": {}})
+            d["tokens_per_sec"] = r
+        else:
+            continue
+        d["params"].update(r.params)
+    phase_names = sorted({p for d in by_level.values() for p in d["phases"]})
+    out = ["| level | offered rps | tok/s | of cap | "
+           + " | ".join(f"{p} %" for p in phase_names) + " |",
+           "|---|---|---|---|" + "---|" * len(phase_names)]
+
+    def frac(lvl, phase):
+        r = lvl["phases"].get(phase)
+        if r is None or r.relative is None:
+            return "-"
+        return f"{r.relative:.0%}"
+
+    def key(level):
+        return by_level[level]["params"].get("offered_mult", 0.0)
+
+    for level in sorted(by_level, key=key):
+        lvl = by_level[level]
+        p = lvl["params"]
+        tps = lvl.get("tokens_per_sec")
+        if not tps:
+            out.append(f"| {level} | incomplete level "
+                       f"(no tokens_per_sec row) |" + " |" * (
+                           2 + len(phase_names)))
+            continue
+        cols = " | ".join(frac(lvl, ph) for ph in phase_names)
+        out.append(f"| {level} | {p.get('requested_rps', 0.0):.1f} "
+                   f"| {tps.value:.0f} | {tps.relative:.0%} | {cols} |")
+    if summary is not None:
+        p = summary.params
+        wm = p.get("kv_watermark", {})
+        out += ["",
+                f"trace: {summary.value} events across tracks "
+                f"{', '.join(p.get('tracks', []))}; "
+                f"kv peak {wm.get('peak_used', '?')} slots "
+                f"({wm.get('peak_frac', 0.0):.0%} of pool)"]
+    return "\n".join(out)
+
+
 def fabric_table(records: Iterable[Record]) -> str:
     """Degraded-fabric view of a ``fabric.*`` Record stream.
 

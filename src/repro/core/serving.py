@@ -64,6 +64,7 @@ EXPERIMENT_SHARDED = "serve.sharded_sweep"
 EXPERIMENT_ENGINE = "serve.continuous_vs_static"
 EXPERIMENT_PAGED = "serve.paged_attention"
 EXPERIMENT_SLO = "serve.slo_sweep"
+EXPERIMENT_TIMELINE = "serve.timeline"
 
 # page-size x buffer-depth grid for the paged-attention microbench.  The
 # depth knob's win is page-granularity amortization (pages in flight per
@@ -670,3 +671,163 @@ def continuous_vs_static(duration: float = 0.3, arch: str = "olmo-1b",
                 "n_requests": n_requests, "wall_s": el, "tokens": toks,
                 "max_new_mix": sorted(set(news))})
         for name, tps, el, toks in results]
+
+
+# offered multiples for the timeline runs: one comfortable, one at the
+# measured knee — enough to show the decomposition shifting from
+# idle-dominated to decode-dominated without a long sweep
+TIMELINE_OFFERED_MULTS = (0.5, 1.0)
+
+
+def timeline(duration: float = 0.3,
+             offered: Sequence[float] = TIMELINE_OFFERED_MULTS,
+             arch: str = "olmo-1b", n_slots: int = 4,
+             cache_len: int = 64, block_size: int = 8,
+             prompt_lens: tuple = (8, 16), max_new: int = 8,
+             max_requests: int = 16,
+             fabric_condition: str = "clean", slo: bool = False,
+             paged: bool = False, tp_size: int = 1,
+             trace_out: Optional[str] = None,
+             seed: int = 0) -> list[Record]:
+    """Traced serve runs: span-time decomposition per load level.
+
+    Runs the continuous engine per offered-load level with the unified
+    tracer attached (``repro.obs``), then reports where each level's wall
+    time went as ``span_time_s`` rows — one per engine-track phase
+    (admit, prefill, decode, idle, fabric_stall), named
+    ``load_<mult>x.<phase>`` with ``relative`` the fraction of the
+    level's wall clock.  The same trace also carries the scheduler's
+    decision instants, per-slot request spans, and pool/queue counters;
+    ``trace_out`` saves it as Chrome-trace-event JSON (Perfetto /
+    chrome://tracing load it directly, ``scripts/check_trace.py``
+    validates it).  A short eager bucket-chain demo (serial then
+    pipelined ``run_schedule``) lands "overlap" stage spans in the same
+    file, so one artifact shows scheduler-to-kernel structure.
+
+    Composes the serving layers: ``fabric_condition`` injects degraded
+    wire stalls (spans labeled by condition), ``slo`` arms SLO-driven
+    admission off the run's own measured medians (shed/preempt instants
+    carry the projected TTFT that justified them), ``paged``/``tp_size``
+    swap the KV residency / shard the decode.
+    """
+    from repro.obs import trace as obs_trace
+
+    cfg = smoke(all_archs()[arch])
+    params = registry.init_params(cfg, jax.random.key(0))
+    fabric = None
+    if fabric_condition != "clean":
+        from repro.fabric import ServeFabric, canonical_conditions
+        conds = canonical_conditions()
+        if fabric_condition not in conds:
+            raise ValueError(f"unknown fabric condition "
+                             f"{fabric_condition!r}; one of {sorted(conds)}")
+        fabric = ServeFabric(conds[fabric_condition])
+
+    # the thread-local tracer (CLI --trace-out) wins; otherwise this run
+    # owns a fresh one — timeline is the one experiment that is always
+    # traced, its Records are *about* the trace
+    tr = obs_trace.current()
+    if not tr.enabled:
+        tr = obs_trace.Tracer(metadata={"experiment": EXPERIMENT_TIMELINE})
+    eng = ContinuousEngine(cfg, params, n_slots=n_slots,
+                           cache_len=cache_len, block_size=block_size,
+                           fabric=fabric, tp_size=tp_size, paged=paged,
+                           tracer=tr)
+    base_params = {"arch": cfg.name, "n_slots": n_slots,
+                   "cache_len": cache_len, "block_size": block_size,
+                   "kv_blocks": eng.kv.n_blocks,
+                   "prompt_lens": list(prompt_lens),
+                   "max_new_tokens": max_new,
+                   "fabric_condition": fabric_condition,
+                   "slo": bool(slo), "paged": bool(paged),
+                   "tp_size": eng.tp_size}
+    records: list[Record] = []
+
+    # burst calibration (also the compile pass): capacity + the measured
+    # medians the optional SLO policy scales from
+    cal_spec = dict(n_requests=2 * n_slots, rate_rps=0.0,
+                    prompt_lens=prompt_lens, max_new_tokens=max_new,
+                    vocab_size=cfg.vocab_size)
+    eng.generate(make_requests(LoadSpec(**cal_spec)))    # compile, untimed
+    cal = make_requests(LoadSpec(**cal_spec, seed=1))
+    t0 = time.perf_counter()
+    eng.generate(cal)
+    cal_el = time.perf_counter() - t0
+    cap_tps = sum(len(r.generated) for r in cal) / cal_el
+    cap_rps = cap_tps / max_new
+    records.append(Record(
+        EXPERIMENT_TIMELINE, "capacity", "tokens_per_sec", cap_tps,
+        unit="tok/s", relative=1.0,
+        params=dict(base_params, wall_s=cal_el, requests_per_sec=cap_rps,
+                    mode="burst")))
+
+    if slo:
+        prefill_med = _pct([r.prefill_s for r in cal], 50)
+        tpot_med = _pct([t for r in cal for t in r.decode_token_s], 50)
+        eng.scheduler.slo = _slo_policy_from_measured(prefill_med, tpot_med)
+
+    window = max(2 * duration, 0.4)
+    for k, mult in enumerate(offered):
+        rate = mult * cap_rps
+        n = int(min(max(rate * window, 4), max_requests))
+        if slo:
+            # the slo_sweep-shaped trace: bursty, two classes
+            stream = make_trace(TraceSpec(
+                n_requests=n, base_rps=rate, classes=SLO_CLASSES,
+                bursts=((0.25 * window, 0.25 * window, 3.0),),
+                prompt_len_buckets=prompt_lens,
+                max_new_buckets=(max_new // 2, max_new),
+                vocab_size=cfg.vocab_size, seed=seed * 1000 + 20 + k))
+        else:
+            stream = make_stream(LoadSpec(
+                n_requests=n, rate_rps=rate, prompt_lens=prompt_lens,
+                max_new_tokens=max_new, vocab_size=cfg.vocab_size,
+                seed=seed * 1000 + 10 + k))
+        reqs = stream.requests
+        span = reqs[-1].arrival_s if reqs else 0.0
+        n0 = len(tr.events)
+        t0 = time.perf_counter()
+        eng.run(reqs, idle_hook=lambda: None,
+                deadline_s=span + 2 * window)
+        el = time.perf_counter() - t0
+        toks = sum(len(r.generated) for r in reqs)
+        name = f"load_{mult:g}x"
+        level = dict(base_params, offered_mult=mult, requested_rps=rate,
+                     n_requests=n, completed=sum(r.done for r in reqs),
+                     wall_s=el, shed=sum(r.t_shed is not None for r in reqs))
+        records.append(Record(
+            EXPERIMENT_TIMELINE, name, "tokens_per_sec", toks / el,
+            unit="tok/s", relative=(toks / el) / cap_tps if cap_tps else None,
+            params=dict(level)))
+        # the tentpole row family: this level's engine-track span-time
+        # decomposition — seconds per phase, relative = share of wall
+        phases = obs_trace.span_times(tr.events[n0:], track="engine")
+        for phase in sorted(phases):
+            d = phases[phase]
+            records.append(Record(
+                EXPERIMENT_TIMELINE, f"{name}.{phase}", "span_time_s",
+                d["total_s"], unit="s",
+                relative=d["total_s"] / el if el else None,
+                params=dict(level, span_count=d["count"])))
+
+    # eager bucket-chain demo: optimization_barrier runs eagerly, so the
+    # overlap stage spans land in the same trace as real host timings
+    with obs_trace.use(tr):
+        a = jnp.ones((32, 32), jnp.float32)
+        for ov in (False, True):
+            run_schedule_overlap = ov
+            from repro.parallel.overlap import run_schedule
+            run_schedule(3, lambda i: a * (i + 1),
+                         lambda buf: jnp.tanh(buf),
+                         run_schedule_overlap)
+
+    snap = tr.metrics.snapshot()
+    records.append(Record(
+        EXPERIMENT_TIMELINE, "trace_summary", "trace_events",
+        float(len(tr.events)), unit="events",
+        params=dict(base_params, counters=snap["counters"],
+                    kv_watermark=eng.kv.watermark(),
+                    tracks=sorted({e["track"] for e in tr.events}))))
+    if trace_out:
+        tr.save(trace_out)
+    return records

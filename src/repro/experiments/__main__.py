@@ -55,6 +55,10 @@ def _parse(argv) -> argparse.Namespace:
                            "stream (default: experiments/records)")
     recs.add_argument("--no-records", action="store_true",
                       help="do not persist the per-run Record stream")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record a unified span trace (repro.obs) across "
+                         "the run and save it as Chrome-trace-event JSON "
+                         "at PATH (open in Perfetto / chrome://tracing)")
     ap.add_argument("--list", action="store_true",
                     help="list registered experiments and exit")
     ap.add_argument("--verbose", action="store_true",
@@ -102,8 +106,19 @@ def main(argv: Optional[list[str]] = None) -> int:
         print(f"no experiments match --only {args.only!r}", file=sys.stderr)
         return 2
 
+    tracer = None
+    if args.trace_out:
+        # installed thread-locally: every traced layer (serve engines,
+        # overlap schedules, train steps) reaches it via obs.current()
+        from repro.obs import Tracer
+        tracer = Tracer(metadata={"cli": "repro.experiments",
+                                  "only": args.only or "all"})
+
     try:
         with contextlib.ExitStack() as stack:
+            if tracer is not None:
+                from repro.obs import trace as obs_trace
+                stack.enter_context(obs_trace.use(tracer))
             fh = (stack.enter_context(open(args.out, "w")) if args.out
                   else sys.stdout)
             if args.format == "csv":
@@ -120,6 +135,11 @@ def main(argv: Optional[list[str]] = None) -> int:
         # for, not an error; detach stdout so the interpreter exits quietly
         os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
         return 0
+
+    if tracer is not None:
+        tracer.save(args.trace_out)
+        print(f"[experiments] trace: {args.trace_out} "
+              f"({len(tracer.events)} events)", file=sys.stderr)
 
     n = len(report.records)
     print(f"[experiments] {n} records, {len(report.skips)} skipped, "

@@ -128,6 +128,18 @@ def _serve_slo(*, duration: float) -> Iterable[Record]:
     return serving.slo_sweep(duration=duration)
 
 
+@experiment("serve.timeline", classes=("CPU",),
+            figure="(span-time decomposition)",
+            description="traced serve runs: engine-track span-time "
+                        "decomposition per load level (admit/prefill/"
+                        "decode/idle/fabric_stall), scheduler decision "
+                        "instants and pool counters in the same "
+                        "Chrome-trace file (--trace-out saves it)")
+def _serve_timeline(*, duration: float) -> Iterable[Record]:
+    from repro.core import serving
+    return serving.timeline(duration=duration)
+
+
 @experiment("serve.continuous_vs_static", classes=("CPU",),
             figure="(engine comparison)",
             description="mixed-length workload: slot-admission continuous "

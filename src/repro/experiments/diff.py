@@ -29,6 +29,14 @@ improvement never fails the build.  Thresholds are per-metric because
 noise is: wall-clock metrics on shared CI runners need loose bounds
 (catastrophic-regression catches only), while modeled metrics (wire
 bytes) can be held to 0.
+
+Gated comparisons additionally require the two streams' environment
+stamps (``params["env"]``, written by the Runner: backend, device count,
+platform, hostname) to be *comparable* — same JAX backend and OS
+platform; a mismatch is exit 2 (refused), not a pass or a fail, because
+a CPU-vs-TPU wall-clock delta measures the hardware swap rather than the
+code.  Device count and hostname deliberately do not gate (CI fabricates
+varying host-device counts on purpose).  ``--ignore-env`` overrides.
 """
 from __future__ import annotations
 
@@ -101,6 +109,38 @@ def _rel_delta(old, new):
     if old == 0:
         return float("inf") if new > old else float("-inf")
     return (new - old) / abs(old)
+
+
+# the env-metadata keys a threshold gate requires to match between the
+# two streams.  Deliberately NOT device_count (CI steps legitimately vary
+# fabricated host-device counts) and NOT hostname (every runner differs):
+# backend (cpu/tpu/gpu) and OS platform are what invalidate a wall-clock
+# comparison outright.
+ENV_COMPARABLE_KEYS = ("backend", "platform")
+
+
+def env_mismatches(old_idx: dict, new_idx: dict,
+                   thresholds: Dict[str, "Threshold"]) -> list[str]:
+    """Threshold-gated row pairs whose environment stamps are not
+    comparable: both rows carry ``params["env"]`` and disagree on any of
+    ``ENV_COMPARABLE_KEYS``.  A CPU-vs-TPU delta gated at a noise bound
+    is a comparison error, not a measurement — the diff refuses (exit 2)
+    rather than passing or failing it.  Rows without env stamps (streams
+    predating the metadata) are compared as before."""
+    out = []
+    for k in sorted(set(old_idx) & set(new_idx)):
+        exp, name, metric = k
+        if metric not in thresholds:
+            continue
+        oe = old_idx[k].params.get("env")
+        ne = new_idx[k].params.get("env")
+        if not isinstance(oe, dict) or not isinstance(ne, dict):
+            continue
+        bad = [f"{key} {oe.get(key)!r} -> {ne.get(key)!r}"
+               for key in ENV_COMPARABLE_KEYS if oe.get(key) != ne.get(key)]
+        if bad:
+            out.append(f"{exp}/{name}.{metric}: {', '.join(bad)}")
+    return out
 
 
 def threshold_violations(old_idx: dict, new_idx: dict,
@@ -197,7 +237,7 @@ def _parse_thresholds(args: list[str]) -> Dict[str, Threshold]:
 
 
 def main(argv: list[str]) -> int:
-    paths, thr_args = [], []
+    paths, thr_args, ignore_env = [], [], False
     it = iter(argv)
     for a in it:
         if a == "--threshold":
@@ -208,11 +248,13 @@ def main(argv: list[str]) -> int:
             thr_args.append(nxt)
         elif a.startswith("--threshold="):
             thr_args.append(a.split("=", 1)[1])
+        elif a == "--ignore-env":
+            ignore_env = True
         else:
             paths.append(a)
     if len(paths) != 2:
         print("usage: python -m repro.experiments diff OLD NEW "
-              "[--threshold METRIC=[+|-]REL ...]\n"
+              "[--threshold METRIC=[+|-]REL ...] [--ignore-env]\n"
               "  OLD/NEW: a Record-stream .jsonl file, or a directory of "
               "them (e.g. experiments/records/baseline)", file=sys.stderr)
         return 2
@@ -235,6 +277,15 @@ def main(argv: list[str]) -> int:
                 print(f"warning: --threshold metric {m!r} matches no rows "
                       "in either stream", file=sys.stderr)
         diff_streams(oidx.values(), nidx.values())
+        if thresholds and not ignore_env:
+            mism = env_mismatches(oidx, nidx, thresholds)
+            if mism:
+                for m in mism:
+                    print(f"ENV MISMATCH {m}", file=sys.stderr)
+                print("diff: refusing to gate thresholds across "
+                      "environments (--ignore-env overrides)",
+                      file=sys.stderr)
+                return 2
         violations = threshold_violations(oidx, nidx, thresholds)
         for v in violations:
             print(f"THRESHOLD EXCEEDED {v}", file=sys.stderr)

@@ -87,6 +87,23 @@ def _device_count() -> int:
         return 0
 
 
+def _environment(ndev: int) -> dict:
+    """Uniform environment stamp every emitted Record carries
+    (``params["env"]``): the JAX backend, device count, platform and
+    hostname.  ``diff`` refuses to gate thresholds across rows whose
+    (backend, platform) differ — a CPU-vs-TPU "regression" is a
+    comparison error, not a regression (``--ignore-env`` overrides)."""
+    import platform
+    import sys as _sys
+    try:
+        import jax
+        backend = jax.default_backend()
+    except Exception:
+        backend = "unknown"
+    return {"backend": backend, "device_count": ndev,
+            "platform": _sys.platform, "hostname": platform.node()}
+
+
 class Runner:
     """Run registered experiments and emit the unified Record stream.
 
@@ -119,11 +136,13 @@ class Runner:
         report = RunReport()
         ndev = _device_count()
         commit = _git_commit()
+        env = _environment(ndev)
         report.records_path, stream = self._open_stream()
 
         def out(r: Record) -> Record:
             if commit is not None:
                 r.params.setdefault("git_commit", commit)
+            r.params.setdefault("env", dict(env))
             report.records.append(r)
             if r.error:
                 report.errors.append(r)

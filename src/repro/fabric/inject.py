@@ -174,6 +174,17 @@ class ChainInjector:
         ci = self._common_iters[i] if i < len(self._common_iters) else 0
         if ci <= 0 and self.straggler_iters <= 0:
             return buf
+        from repro.obs import trace as obs_trace
+        tr = obs_trace.current()
+        if tr.enabled:
+            # a burn landing in a chain, labeled by the condition that
+            # sampled it — host-side trace-time emission; the burn itself
+            # stays inside the compiled schedule untouched
+            tr.instant("fabric", "burn", "fabric", chain=i,
+                       condition=self.condition.name,
+                       delay_s=self.common_delays_s[i]
+                       if i < len(self.common_delays_s) else 0.0,
+                       straggler_iters=self.straggler_iters)
         return stall(buf, ci, self.straggler_iters, self.axis_name,
                      self.condition.straggler_device)
 

@@ -35,6 +35,13 @@ priority-aware with preemption and shed, and the summary reports
 per-class SLO attainment (DESIGN.md section 15).  ``--classes`` cycles
 the given priority classes over generated requests when no trace
 supplies them.
+
+``--trace-out PATH`` attaches the unified span tracer (``repro.obs``,
+DESIGN.md section 16) to the run and saves the Chrome-trace-event JSON —
+engine-loop phases, scheduler decision instants, one track per decode
+slot, pool/queue counters — loadable in Perfetto or chrome://tracing.
+``--log-cap N`` ring-buffers the engine's step log and the scheduler's
+admit/shed logs at N entries (evictions counted and reported).
 """
 from __future__ import annotations
 
@@ -114,6 +121,16 @@ def main():
                     help="comma-separated priority classes cycled over "
                          "generated requests (e.g. interactive,batch); "
                          "ignored when --trace supplies classes")
+    ap.add_argument("--trace-out", default="",
+                    help="save the run's unified span trace (engine loop, "
+                         "scheduler decisions, per-slot request spans, "
+                         "pool counters — repro.obs) as Chrome-trace-event "
+                         "JSON at this path; open in Perfetto or "
+                         "chrome://tracing (continuous engine only)")
+    ap.add_argument("--log-cap", type=int, default=0,
+                    help="ring-buffer cap on the engine's step log and the "
+                         "scheduler's admit/shed logs (0 = unbounded); "
+                         "evictions are counted and reported, not silent")
     args = ap.parse_args()
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -168,6 +185,12 @@ def main():
     if args.static and args.save_trace:
         ap.error("--save-trace records the continuous engine's request "
                  "stream (drop --static)")
+    if args.static and (args.trace_out or args.log_cap):
+        ap.error("--trace-out/--log-cap instrument the continuous "
+                 "engine's loop; the static engine has no span "
+                 "instrumentation (drop --static)")
+    if args.log_cap < 0:
+        ap.error("--log-cap must be >= 0 (0 = unbounded)")
 
     cfg = smoke(all_archs()[args.arch])
     params = registry.init_params(cfg, jax.random.key(0))
@@ -212,12 +235,19 @@ def main():
         if args.fabric != "clean":
             fabric = ServeFabric(canon[args.fabric])
         policy = SLOPolicy.from_runtime() if args.slo else None
+        tracer = None
+        if args.trace_out:
+            from repro.obs import Tracer
+            tracer = Tracer(metadata={"cli": "repro.launch.serve",
+                                      "arch": cfg.name,
+                                      "fabric": args.fabric})
         eng = ContinuousEngine(cfg, params, n_slots=args.batch,
                                cache_len=args.cache_len,
                                block_size=args.block_size, fabric=fabric,
                                tp_size=args.tp_size, paged=args.paged,
                                page_buffer_depth=args.buffer_depth,
-                               slo=policy)
+                               slo=policy, tracer=tracer,
+                               log_cap=args.log_cap or None)
         reqs = build_requests()
         if args.save_trace:
             save_trace(reqs, args.save_trace)
@@ -260,6 +290,20 @@ def main():
             print(f"[serve] slo: {len(sched.admit_log)} admissions, "
                   f"{len(sched.preempt_log)} preemptions, "
                   f"{len(sched.shed_log)} shed")
+        if args.log_cap:
+            dropped = (eng.step_log.dropped
+                       + eng.scheduler.admit_log.dropped
+                       + eng.scheduler.shed_log.dropped)
+            print(f"[serve] log cap {args.log_cap}: "
+                  f"{len(eng.step_log)} step events kept, "
+                  f"{dropped} evicted (step={eng.step_log.dropped}, "
+                  f"admit={eng.scheduler.admit_log.dropped}, "
+                  f"shed={eng.scheduler.shed_log.dropped})")
+        if tracer is not None:
+            tracer.save(args.trace_out)
+            print(f"[serve] trace: {args.trace_out} "
+                  f"({len(tracer.events)} events; load in Perfetto or "
+                  f"chrome://tracing)")
     toks = sum(len(r.generated) for r in reqs)
     mode = "static" if args.static else (
         f"continuous tp={args.tp_size}" if args.tp_size > 1 else

@@ -66,6 +66,9 @@ def main():
                     help="dry-run JSON to derive the offload plan from")
     ap.add_argument("--smoke", action="store_true",
                     help="use the tiny smoke config instead of --scale")
+    ap.add_argument("--trace-out", default="",
+                    help="save a Chrome-trace-event JSON span timeline of "
+                         "the run (per-step and checkpoint spans) at PATH")
     args = ap.parse_args()
 
     base = all_archs()[args.arch]
@@ -120,11 +123,25 @@ def main():
         state, start = mgr.restore(
             abstract, shardings=tstep.state_shardings(abstract, ctx))
         print(f"[train] resumed from step {start}")
-    state, hist = tloop.train_loop(
-        jax.jit(stepf, donate_argnums=0), state, dcfg, bspec, mgr,
-        tloop.LoopConfig(total_steps=args.steps,
-                         checkpoint_every=args.ckpt_every, log_every=10),
-        start_step=start)
+    tracer = None
+    if args.trace_out:
+        from repro.obs import Tracer
+        tracer = Tracer(metadata={"cli": "repro.launch.train",
+                                  "arch": cfg.name})
+    import contextlib
+    with contextlib.ExitStack() as stack:
+        if tracer is not None:
+            from repro.obs import trace as obs_trace
+            stack.enter_context(obs_trace.use(tracer))
+        state, hist = tloop.train_loop(
+            jax.jit(stepf, donate_argnums=0), state, dcfg, bspec, mgr,
+            tloop.LoopConfig(total_steps=args.steps,
+                             checkpoint_every=args.ckpt_every, log_every=10),
+            start_step=start)
+    if tracer is not None:
+        tracer.save(args.trace_out)
+        print(f"[train] trace: {args.trace_out} "
+              f"({len(tracer.events)} events)")
     if hist:
         print(f"[train] done: loss {hist[0]['loss']:.4f} -> "
               f"{hist[-1]['loss']:.4f} over {len(hist)} steps")

@@ -38,11 +38,13 @@ would be identical anyway.
 """
 from __future__ import annotations
 
+import itertools
 from typing import Callable, Optional
 
 import jax
 
 from repro import runtime
+from repro.obs import trace as obs_trace
 
 
 # ---------------------------------------------------------------------------
@@ -136,6 +138,30 @@ def run_schedule(n: int, pack: Callable[[int], jax.Array],
     outs: list = []
     if n == 0:        # every leaf below the compress threshold: nothing
         return outs   # to schedule (the grouped pmean is the caller's)
+    tr = obs_trace.current()
+    if tr.enabled:
+        # span the pack/exchange stages on the thread's tracer.  Under jit
+        # this is *trace-time* host cost (the spans time graph building,
+        # labeled per stage and schedule); in an eager run — like the
+        # serve.timeline overlap demo, where optimization_barrier runs
+        # eagerly — they time the stages themselves.  Wrapping changes
+        # neither call counts nor order, so the issued graph is identical.
+        lbl = "pipelined" if overlap else "serial"
+        _pack, _exchange, _chain_no = pack, exchange, itertools.count()
+
+        def pack(i):
+            with tr.span("overlap", f"pack{i}", "overlap",
+                         schedule=lbl, bucket=i):
+                return _pack(i)
+
+        def exchange(buf):
+            i = next(_chain_no)
+            tr.metrics.count("chains_issued")
+            with tr.span("overlap", f"chain{i}", "overlap",
+                         schedule=lbl, bucket=i):
+                out = _exchange(buf)
+            tr.metrics.count("chains_retired")
+            return out
     if not overlap:
         done = None
         for i in range(n):

@@ -65,6 +65,13 @@ _DEFAULT = {
         "batch": {"rank": 2, "ttft_s": 10.0, "tpot_s": 2.0,
                   "shed_after_s": 10.0},
     },
+    "obs_trace": False,         # unified span tracing (repro.obs): True
+    #                             makes every new ContinuousEngine build
+    #                             its own Tracer (timestamps on the
+    #                             engine clock) instead of the disabled
+    #                             null tracer; the CLI --trace-out flags
+    #                             install a thread-local tracer without
+    #                             touching this knob (DESIGN.md sec. 16)
     "serve_slo_attainment_min": 0.9,  # planner rule 5, SLO arm: when
     #                             serve.slo_sweep records are present the
     #                             offload verdict additionally requires the

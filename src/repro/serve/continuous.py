@@ -70,6 +70,8 @@ import numpy as np
 
 from repro import runtime
 from repro.configs.base import ArchConfig
+from repro.obs import trace as obs_trace
+from repro.obs.logbuf import BoundedLog
 from repro.parallel import compat
 from repro.serve.kv import KVBlockAllocator, blocks_for
 from repro.serve.scheduler import ServeRequest, SlotScheduler
@@ -108,7 +110,8 @@ class ContinuousEngine:
                  clock: Callable[[], float] = time.perf_counter,
                  fabric=None, mesh=None, tp_size: int = 1,
                  paged: bool = False, page_buffer_depth: int = 2,
-                 slo=None, debug: bool = False):
+                 slo=None, tracer=None, log_cap: Optional[int] = None,
+                 debug: bool = False):
         # fabric: an optional repro.fabric.ServeFabric — the degraded-wire
         # enforcement point for serving.  Its stall_admit runs before each
         # admitted prefill (TTFT inflates, queue_wait does not) and
@@ -132,6 +135,16 @@ class ContinuousEngine:
         # every slot recycle (KVBlockAllocator.check) — cheap at serve
         # scale, and it catches table corruption at the step that caused
         # it rather than at teardown.
+        #
+        # tracer: repro.obs span tracing — None resolves via the
+        # ``obs_trace`` runtime knob, then the thread-local current tracer
+        # (CLI --trace-out), then the disabled null tracer.  Every engine
+        # emission passes a timestamp the loop already computed (the
+        # virtual-clock contract: a traced run makes exactly the same
+        # clock calls as an untraced one, so token streams stay
+        # bit-identical — DESIGN.md section 16).  log_cap ring-buffers
+        # step_log and the scheduler's admit/shed logs (evictions counted
+        # in each log's ``dropped``); None keeps them unbounded.
         self.cfg = cfg
         self.n_slots = n_slots
         self.cache_len = cache_len
@@ -166,12 +179,21 @@ class ContinuousEngine:
         self.kv = KVBlockAllocator(n_blocks=kv_blocks,
                                    block_size=block_size,
                                    n_shards=self.tp_size)
-        self.scheduler = SlotScheduler(n_slots, self.kv, slo=slo)
+        self.tracer = tracer if tracer is not None \
+            else obs_trace.resolve(clock=clock)
+        self.log_cap = log_cap
+        self.scheduler = SlotScheduler(n_slots, self.kv, slo=slo,
+                                       tracer=self.tracer, log_cap=log_cap)
         if prefill_per_step is None:
             prefill_per_step = int(runtime.policy()["serve_prefill_per_step"])
         self.prefill_per_step = max(1, prefill_per_step)
-        self.step_log: list[StepEvent] = []
+        self.step_log: BoundedLog = BoundedLog(log_cap)
         self.idle_iters = 0
+        # trace bookkeeping: which slot tracks have an open request span,
+        # and whether a merged idle span is open on the engine track
+        self._slot_open = [False] * n_slots
+        self._idle_open = False
+        self._t0 = 0.0
 
         self._prefill = self.cells.prefill
         self._decode = self.cells.decode
@@ -204,6 +226,22 @@ class ContinuousEngine:
                 f"request needs {self.kv.blocks_for(lifetime)} KV blocks, "
                 f"pool holds {self.kv.n_blocks}")
 
+    # -- tracing helpers ---------------------------------------------------
+    # Timestamps handed to the tracer are absolute (run epoch + relative
+    # engine time): one tracer can span calibration + sweep runs and every
+    # track's timestamps stay monotone in the export.
+
+    def _T(self, rel: float) -> float:
+        return self._t0 + rel
+
+    def _trace_work_start(self, rel: float) -> None:
+        """Close the merged idle span (if open) at this working
+        iteration's start — consecutive idle iterations render as one
+        span, ended the moment work resumes."""
+        if self._idle_open:
+            self.tracer.end("engine", t=self._T(rel))
+            self._idle_open = False
+
     # -- engine steps ------------------------------------------------------
 
     def _admit_one(self, now: float) -> Optional[int]:
@@ -219,16 +257,37 @@ class ContinuousEngine:
         n_preempt = len(self.scheduler.preempt_log)
         adm = self.scheduler.admit(now)
         for _, vacated in self.scheduler.preempt_log[n_preempt:]:
-            self._reset_slot(vacated)
+            self._reset_slot(vacated, t_rel=now)
         if adm is None:
             return None
         slot, req = adm
+        tr = self.tracer
+        stall_s = 0.0
+        if tr.enabled:
+            self._trace_work_start(now)
+            tr.begin("engine", "admit", "engine", t=self._T(now),
+                     rid=req.rid, slot=slot, prompt_len=len(req.prompt))
+            self._slot_open[slot] = True
+            tr.begin(f"slot{slot}", f"r{req.rid}", "slot", t=self._T(now),
+                     rid=req.rid, prompt_len=len(req.prompt),
+                     max_new=req.max_new_tokens, priority=req.priority)
         if self.fabric is not None:
             # admission stall lands after the scheduler stamped t_admit:
             # the injected delay shows up as prefill time / TTFT, not as
             # queue wait — the decomposition keeps blaming the fabric,
             # not the admission policy
+            s0 = self.fabric.stalled_s["admit"]
             self.fabric.stall_admit()
+            stall_s = self.fabric.stalled_s["admit"] - s0
+            if tr.enabled and stall_s > 0:
+                # span duration is the injected stall itself (measured as
+                # the fabric's accumulator delta — no clock calls)
+                tr.begin("engine", "fabric_stall", "fabric", t=self._T(now),
+                         kind="admit", condition=self.fabric.condition.name)
+                tr.end("engine", t=self._T(now + stall_s), stalled_s=stall_s)
+        if tr.enabled:
+            tr.begin("engine", "prefill", "engine",
+                     t=self._T(now + stall_s), rid=req.rid)
         logits, slot_caches = self._prefill(
             self.params, jnp.asarray(req.prompt, jnp.int32)[None])
         first = int(jnp.argmax(logits[0, -1]))
@@ -249,20 +308,45 @@ class ContinuousEngine:
         self._idx[slot] = len(req.prompt)
         req.generated.append(first)
         req.t_first_token = self.clock() - self._t0
+        if tr.enabled:
+            # clamp against the synthetic stall extent so the engine track
+            # stays monotone even when a virtual clock's tick is smaller
+            # than the injected stall
+            t_end = max(req.t_first_token, now + stall_s)
+            tr.end("engine", t=self._T(t_end))          # prefill
+            tr.instant("engine", "insert", "engine", t=self._T(t_end),
+                       rid=req.rid, slot=slot, paged=self.paged)
+            tr.end("engine", t=self._T(t_end), rid=req.rid)   # admit
+            tr.metrics.observe("prefill_s", req.t_first_token - now)
         if len(req.generated) >= req.max_new_tokens:
             self.scheduler.complete(slot, req.t_first_token)
-            self._reset_slot(slot)
+            self._reset_slot(slot, t_rel=max(req.t_first_token,
+                                             now + stall_s))
         return req.rid
 
     def _decode_once(self) -> list[int]:
         """One synchronized decode step for every active slot."""
         active = self.scheduler.active()
         t_start = self.clock() - self._t0
+        tr = self.tracer
+        stall_s = 0.0
+        if tr.enabled:
+            self._trace_work_start(t_start)
+            tr.begin("engine", "decode", "engine", t=self._T(t_start),
+                     n_active=len(active))
         if self.fabric is not None:
             # inside the tick's timing window, so per-token stamps (TPOT)
             # absorb the injected delay; the straggler term applies here —
             # a batched step moves at the pace of its slowest device
+            s0 = self.fabric.stalled_s["decode"]
             self.fabric.stall_decode()
+            stall_s = self.fabric.stalled_s["decode"] - s0
+            if tr.enabled and stall_s > 0:
+                tr.begin("engine", "fabric_stall", "fabric",
+                         t=self._T(t_start), kind="decode",
+                         condition=self.fabric.condition.name)
+                tr.end("engine", t=self._T(t_start + stall_s),
+                       stalled_s=stall_s)
         if self.paged:
             logits, self._pool = self._decode(
                 self.params, jnp.asarray(self._tok)[:, None],
@@ -274,6 +358,7 @@ class ContinuousEngine:
                 jnp.asarray(self._idx), self._caches)
             nxt = np.asarray(jnp.argmax(logits[:, 0, -1], axis=-1))  # host
         now = self.clock() - self._t0
+        t_end = max(now, t_start + stall_s)
         decoded = []
         for slot, req in active:
             tok = int(nxt[slot])
@@ -284,10 +369,13 @@ class ContinuousEngine:
             decoded.append(req.rid)
             if len(req.generated) >= req.max_new_tokens:
                 self.scheduler.complete(slot, now)
-                self._reset_slot(slot)
+                self._reset_slot(slot, t_rel=t_end)
+        if tr.enabled:
+            tr.end("engine", t=self._T(t_end), n_decoded=len(decoded))
+            tr.metrics.observe("decode_tick_s", now - t_start)
         return decoded
 
-    def _reset_slot(self, slot: int) -> None:
+    def _reset_slot(self, slot: int, t_rel: Optional[float] = None) -> None:
         # keep the garbage decode of a free slot inside the cache bounds;
         # the next admission overwrites the whole slot cache anyway
         self._tok[slot] = 0
@@ -298,6 +386,11 @@ class ContinuousEngine:
             # write into a page the next reservation hands out
             self._tables_np[slot] = self.kv.trash_page
             self._tables_dev = jnp.asarray(self._tables_np)
+        if self._slot_open[slot] and t_rel is not None:
+            # close the slot-track request span at the vacating event's
+            # own time (complete / preempt / deadline abort)
+            self.tracer.end(f"slot{slot}", t=self._T(t_rel))
+            self._slot_open[slot] = False
         if self.debug:
             self.kv.check()
 
@@ -331,16 +424,37 @@ class ContinuousEngine:
                 "reentrant — wait for the previous run to complete")
         for r in requests:
             self._validate(r)
-        self.step_log = []
+        self.step_log = BoundedLog(self.log_cap)
         self.idle_iters = 0
         arrivals = sorted(requests, key=lambda r: r.arrival_s)
         n_seen = 0
         self._t0 = self.clock()
+        tr = self.tracer
+        if tr.enabled:
+            # the scheduler shares this run's epoch so its decision
+            # instants land on the same absolute timeline
+            self.scheduler.trace_t0 = self._t0
+            tr.instant("engine", "run_begin", "engine", t=self._t0,
+                       n_requests=len(requests), n_slots=self.n_slots,
+                       paged=self.paged, tp_size=self.tp_size,
+                       condition=(self.fabric.condition.name
+                                  if self.fabric is not None else "clean"))
+            if self.paged:
+                from repro.serve.paged import pool_geometry
+                tr.instant("kv", "pool_geometry", "kv", t=self._t0,
+                           **pool_geometry(self.cfg, self.kv.n_pages,
+                                           self.kv.block_size))
+        self._idle_open = False
+        now = 0.0
         while n_seen < len(arrivals) or self.scheduler.has_work:
             now = self.clock() - self._t0
             if deadline_s is not None and now >= deadline_s:
+                if tr.enabled:
+                    self._trace_work_start(now)
+                    tr.instant("engine", "deadline_abort", "engine",
+                               t=self._T(now), deadline_s=deadline_s)
                 for slot in self.scheduler.abort(now, reason="deadline"):
-                    self._reset_slot(slot)
+                    self._reset_slot(slot, t_rel=now)
                 for r in arrivals[n_seen:]:     # never even arrived
                     r.t_shed, r.shed_reason = now, "deadline"
                 n_seen = len(arrivals)
@@ -358,14 +472,39 @@ class ContinuousEngine:
             decoded = self._decode_once() if self.scheduler.n_active else []
             if not admitted and not decoded:
                 self.idle_iters += 1
+                if tr.enabled:
+                    if not self._idle_open:
+                        tr.begin("engine", "idle", "engine", t=self._T(now))
+                        self._idle_open = True
+                    tr.metrics.count("idle_iters")
                 if idle_hook is not None:
                     idle_hook()
                 else:
                     time.sleep(self.IDLE_SLEEP_S)
                 continue
+            if tr.enabled:
+                # per-iteration pool/queue watermarks, each on its own
+                # counter track (timestamps are this iteration's loop-top
+                # time, monotone per track by construction)
+                tr.counter("queue", "queue_depth", t=self._T(now),
+                           depth=len(self.scheduler.pending))
+                tr.counter("slots", "slot_occupancy", t=self._T(now),
+                           active=self.scheduler.n_active)
+                tr.counter("kv", "kv_pages", t=self._T(now),
+                           free=self.kv.n_free, used=self.kv.n_used)
+                tr.metrics.gauge("queue_depth",
+                                 float(len(self.scheduler.pending)))
+                tr.metrics.gauge("slot_occupancy",
+                                 float(self.scheduler.n_active))
+                tr.metrics.gauge("kv_pages_free", float(self.kv.n_free))
+                tr.metrics.count("work_iters")
             self.step_log.append(StepEvent(
                 now=now, admitted=tuple(admitted), decoded=tuple(decoded),
                 queued=len(self.scheduler.pending)))
+        if tr.enabled:
+            # a still-open merged idle span (the loop drained while idle)
+            # closes at the last loop-top time seen
+            self._trace_work_start(now)
         return requests
 
     def generate(self, requests: list[ServeRequest]) -> list[ServeRequest]:

@@ -66,6 +66,8 @@ class KVBlockAllocator:
     _tables: dict = field(default_factory=dict)     # rid -> [block ids]
     _sizes: dict = field(default_factory=dict)      # rid -> reserved tokens
 
+    peak_used: int = 0                              # high-water mark
+
     def __post_init__(self):
         assert self.n_blocks > 0 and self.block_size > 0
         assert self.n_shards >= 1
@@ -80,6 +82,13 @@ class KVBlockAllocator:
     @property
     def n_used(self) -> int:
         return self.n_blocks - len(self._free)
+
+    def watermark(self) -> dict:
+        """Pool pressure snapshot for the tracer/Record params: current
+        and peak occupancy, in blocks and as a fraction of the pool."""
+        return {"used": self.n_used, "free": self.n_free,
+                "peak_used": self.peak_used,
+                "peak_frac": self.peak_used / self.n_blocks}
 
     # -- physical frame (the paged pool's page space) ----------------------
 
@@ -115,6 +124,7 @@ class KVBlockAllocator:
         table = [self._free.pop() for _ in range(need)]
         self._tables[rid] = table
         self._sizes[rid] = max(n_tokens, 0)
+        self.peak_used = max(self.peak_used, self.n_used)
         return list(table)
 
     def table(self, rid: int) -> list[int]:

@@ -76,6 +76,18 @@ def init_kv_pool(cfg: ArchConfig, n_pages: int, block_size: int):
     return {f"l{i}": pool for i in range(cfg.layer_group)}
 
 
+def pool_geometry(cfg: ArchConfig, n_pages: int, block_size: int) -> dict:
+    """Physical footprint of the pool ``init_kv_pool`` materializes, for
+    the tracer's pool-geometry instant and Record params: page count,
+    bytes per page across every layer-group leaf, and total pool bytes."""
+    import numpy as np
+    itemsize = np.dtype(common.dtype_of(cfg)).itemsize
+    page_bytes = (cfg.num_groups() * block_size * 2 * cfg.num_kv_heads
+                  * cfg.hd * itemsize) * cfg.layer_group
+    return {"n_pages": n_pages, "block_size": block_size,
+            "page_bytes": page_bytes, "pool_bytes": page_bytes * n_pages}
+
+
 def _constrain_pool(pool_l):
     """Pool split over 'model' on the fused head axis (pruned by
     ``safe_spec`` when 2*Kv is not divisible); pages/positions local."""

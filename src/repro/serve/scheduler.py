@@ -42,6 +42,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.obs import trace as obs_trace
+from repro.obs.logbuf import BoundedLog
 from repro.serve.kv import KVBlockAllocator
 
 
@@ -169,16 +171,26 @@ class SlotScheduler:
     _ALPHA = 0.3
 
     def __init__(self, n_slots: int, kv: KVBlockAllocator,
-                 slo: Optional[SLOPolicy] = None):
+                 slo: Optional[SLOPolicy] = None,
+                 tracer=None, log_cap: Optional[int] = None):
         assert n_slots > 0
         self.n_slots = n_slots
         self.kv = kv
         self.slo = slo
+        # tracer: decision instants (admit/shed/preempt with args) land on
+        # the "scheduler" track; timestamps are the `now` values callers
+        # already computed plus trace_t0 (the engine sets it to its run
+        # epoch so tracks stay monotone across runs) — the tracer's own
+        # clock is never called here (obs/trace.py, the virtual-clock
+        # contract).  log_cap ring-buffers admit_log/shed_log; preempt_log
+        # stays a plain list (the engine slices it by index).
+        self.tracer = tracer if tracer is not None else obs_trace.NULL
+        self.trace_t0 = 0.0
         self.pending: deque[ServeRequest] = deque()
         self.slots: list[Optional[ServeRequest]] = [None] * n_slots
-        self.admit_log: list[tuple[int, int]] = []   # (rid, slot), in order
+        self.admit_log: BoundedLog = BoundedLog(log_cap)  # (rid, slot)
         self.preempt_log: list[tuple[int, int]] = []  # (rid, slot it vacated)
-        self.shed_log: list[tuple[int, str]] = []     # (rid, reason)
+        self.shed_log: BoundedLog = BoundedLog(log_cap)   # (rid, reason)
         # observed-decomposition estimators the policy conditions on
         self.est_prefill_s: Optional[float] = None
         self.est_tpot_s: Optional[float] = None
@@ -217,8 +229,16 @@ class SlotScheduler:
         req.t_shed = now
         req.shed_reason = reason
         self.shed_log.append((req.rid, reason))
+        tr = self.tracer
+        if tr.enabled:
+            tr.instant("scheduler", "shed", "scheduler",
+                       t=self.trace_t0 + now, rid=req.rid, reason=reason,
+                       priority=req.priority,
+                       waited_s=now - (req.t_enqueue or 0.0))
+            tr.metrics.count("sheds")
 
-    def _preempt(self, slot: int, now: float) -> ServeRequest:
+    def _preempt(self, slot: int, now: float,
+                 projected_ttft: Optional[float] = None) -> ServeRequest:
         """Evict the request in ``slot``: release its pages, wipe its
         served progress (greedy decode restarts bit-identically from the
         same prompt), keep ``t_enqueue`` so queue wait stays honest."""
@@ -233,6 +253,13 @@ class SlotScheduler:
         req.n_preempted += 1
         self.pending.append(req)
         self.preempt_log.append((req.rid, slot))
+        tr = self.tracer
+        if tr.enabled:
+            tr.instant("scheduler", "preempt", "scheduler",
+                       t=self.trace_t0 + now, victim_rid=req.rid, slot=slot,
+                       victim_priority=req.priority,
+                       projected_ttft_s=projected_ttft)
+            tr.metrics.count("preemptions")
         return req
 
     def _admit_into(self, req: ServeRequest, slot: int,
@@ -243,6 +270,13 @@ class SlotScheduler:
         self.slots[slot] = req
         self.admit_log.append((req.rid, slot))
         req.t_admit = now
+        tr = self.tracer
+        if tr.enabled:
+            tr.instant("scheduler", "admit", "scheduler",
+                       t=self.trace_t0 + now, rid=req.rid, slot=slot,
+                       priority=req.priority,
+                       queue_wait_s=now - (req.t_enqueue or 0.0))
+            tr.metrics.count("admits")
         return slot, req
 
     def admit(self, now: float) -> Optional[tuple[int, ServeRequest]]:
@@ -317,7 +351,7 @@ class SlotScheduler:
                     return (self.slo.slo_for(r.priority).rank,
                             remaining * tpot, r.rid)
                 slot_v, _ = max(victims, key=cost)
-                self._preempt(slot_v, now)
+                self._preempt(slot_v, now, projected_ttft=projected_ttft)
 
         if not placeable():
             return None
@@ -345,6 +379,12 @@ class SlotScheduler:
         req.done = True
         self.kv.release(req.rid)
         self.slots[slot] = None
+        tr = self.tracer
+        if tr.enabled:
+            tr.instant("scheduler", "complete", "scheduler",
+                       t=self.trace_t0 + now, rid=req.rid, slot=slot,
+                       n_tokens=len(req.generated))
+            tr.metrics.count("completions")
         for attr, sample in (("est_prefill_s", req.prefill_s),
                              ("est_tpot_s", req.tpot_s)):
             if sample is not None:

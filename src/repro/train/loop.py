@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, synth_batch
+from repro.obs import trace as obs_trace
 
 
 @dataclass
@@ -67,10 +68,18 @@ def train_loop(step_fn: Callable, state, data_cfg: DataConfig,
             if batch_shardings is not None:
                 batch = {k: jax.device_put(v, batch_shardings.get(k))
                          for k, v in batch.items()}
+            tr = obs_trace.current()
             t0 = time.perf_counter()
-            state, metrics = step_fn(state, batch)
-            jax.block_until_ready(metrics["loss"])
+            # the span brackets exactly the timed region (dispatch +
+            # block); the train loop runs on the wall clock, so the
+            # tracer stamping its own time here is fine (unlike the
+            # serve engine's virtual-clock paths)
+            with tr.span("train", "step", "train", step=step):
+                state, metrics = step_fn(state, batch)
+                jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
+            if tr.enabled:
+                tr.metrics.observe("train_step_s", dt)
             warn = stats.observe(dt)
             if warn:
                 log(f"[step {step}] {warn}")
@@ -82,7 +91,8 @@ def train_loop(step_fn: Callable, state, data_cfg: DataConfig,
                     f"gnorm={float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms")
             step += 1
             if loop.checkpoint_every and step % loop.checkpoint_every == 0:
-                manager.save(step, state)
+                with tr.span("train", "checkpoint", "train", step=step):
+                    manager.save(step, state)
         except KeyboardInterrupt:
             raise
         except Exception as e:  # preemption / injected fault
